@@ -1,0 +1,40 @@
+"""Pallas kernel interpret-mode sanity timings vs jnp reference (not a paper
+table; regression tracking for the kernel layer)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+
+def _t(fn, *a, iters=10):
+    out = fn(*a)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    data = jnp.asarray(rng.standard_normal((4096, 128)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 4096, 128).astype(np.int32))
+    rows.append(("pack_kernel_128x128", _t(K.sf_pack, data, idx),
+                 "interpret-mode=correctness-only"))
+    rows.append(("pack_ref_128x128", _t(lambda d, i: R.pack_ref(d, i),
+                                        data, idx), ""))
+    q = jnp.asarray(rng.standard_normal((256, 4, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((256, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((256, 2, 64)).astype(np.float32))
+    rows.append(("flash_kernel_256", _t(K.flash_attention, q, k, v), ""))
+    rows.append(("flash_ref_256",
+                 _t(lambda a, b, c: R.flash_attention_ref(a, b, c), q, k, v),
+                 ""))
+    return rows

@@ -1,0 +1,20 @@
+"""Paper §6.3 / Fig 11: mesh migration timings for Seq / Chunks / Rand
+initial distributions as rank count grows (scaled-down periodic hex mesh)."""
+
+from repro.meshdist.plex import HexMesh, distribute, initial_distribution
+
+
+def run():
+    rows = []
+    mesh = HexMesh(12, 12, 12)
+    # warmup: compile the migration bcast kernels once
+    distribute(initial_distribution(mesh, 4, "chunks"))
+    for nranks in (4, 8, 16):
+        for kind in ("seq", "chunks", "rand"):
+            dm0 = initial_distribution(mesh, nranks, kind)
+            _, times = distribute(dm0, time_phases=True)
+            rows.append((f"meshdist_{kind}_r{nranks}",
+                         times["total"] * 1e6,
+                         f"migration={times['migration']*1e3:.1f}ms,"
+                         f"setup={times['local_setup']*1e3:.1f}ms"))
+    return rows

@@ -1,0 +1,55 @@
+"""Paper §6.4 / Fig 12: parallel sparse matrix products AP and PtAP.
+
+A = 2nd-order FD Laplacian on a 2D grid; P = smoothed-aggregation-style
+piecewise-constant prolongator (the AMG shapes of the paper's test), weak-
+scaled over rank counts."""
+
+import time
+
+import numpy as np
+
+from repro.sparse.parmat import ParCSR
+
+
+def _fd_laplacian_2d(nx):
+    n = nx * nx
+    rows, cols, vals = [], [], []
+    for j in range(nx):
+        for i in range(nx):
+            r = j * nx + i
+            rows.append(r); cols.append(r); vals.append(4.0)
+            for di, dj in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                ii, jj = i + di, j + dj
+                if 0 <= ii < nx and 0 <= jj < nx:
+                    rows.append(r); cols.append(jj * nx + ii)
+                    vals.append(-1.0)
+    return n, np.array(rows), np.array(cols), np.array(vals)
+
+
+def _aggregation(n, factor=4):
+    rows = np.arange(n)
+    cols = rows // factor
+    vals = np.ones(n)
+    return rows, cols, vals, (n + factor - 1) // factor
+
+
+def run():
+    rows_out = []
+    for nranks, nx in ((2, 24), (4, 32), (8, 40)):
+        n, ar, ac, av = _fd_laplacian_2d(nx)
+        A = ParCSR.from_global_coo(nranks, n, n, ar, ac, av,
+                                   dtype=np.float64)
+        pr, pc, pv, m = _aggregation(n)
+        P = ParCSR.from_global_coo(nranks, n, m, pr, pc, pv,
+                                   dtype=np.float64)
+        t0 = time.perf_counter()
+        AP = A.spmm(P)
+        t_ap = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        G = A.ptap(P)
+        t_ptap = time.perf_counter() - t0
+        rows_out.append((f"spmm_AP_r{nranks}_n{n}", t_ap * 1e6,
+                         f"nnz={AP.toarray().astype(bool).sum()}"))
+        rows_out.append((f"spmm_PtAP_r{nranks}_n{n}", t_ptap * 1e6,
+                         f"nnz={G.toarray().astype(bool).sum()}"))
+    return rows_out

@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Table/figure map:
+  Table 1  -> bench_pingpong      Fig 5/9 -> bench_async
+  Fig 10   -> bench_cg            Fig 11  -> bench_meshdist
+  Fig 12   -> bench_spmm          (extra) -> bench_kernels
+Roofline tables are produced by ``python -m repro.launch.roofline`` from the
+dry-run reports.
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: pingpong,async,cg,meshdist,spmm,kernels")
+    args = ap.parse_args()
+    from benchmarks import (bench_async, bench_cg, bench_kernels,
+                            bench_meshdist, bench_pingpong, bench_spmm)
+    suites = {
+        "pingpong": bench_pingpong.run,
+        "async": bench_async.run,
+        "cg": bench_cg.run,
+        "meshdist": bench_meshdist.run,
+        "spmm": bench_spmm.run,
+        "kernels": bench_kernels.run,
+    }
+    wanted = list(suites) if args.only == "all" else args.only.split(",")
+    print("name,us_per_call,derived")
+    ok = True
+    for name in wanted:
+        try:
+            for row in suites[name]():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception as e:  # noqa: BLE001
+            ok = False
+            print(f"{name}_FAILED,0,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

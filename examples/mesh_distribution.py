@@ -1,0 +1,38 @@
+"""Paper §6.3 demo: distribute a periodic hex mesh from Seq / Chunks / Rand
+initial layouts, then run a ghost exchange over the derived vertex SF.
+
+PYTHONPATH=src python examples/mesh_distribution.py
+"""
+
+import numpy as np
+
+from repro.meshdist.plex import (HexMesh, distribute, initial_distribution,
+                                 local_to_global, make_vertex_sf)
+
+
+def main():
+    mesh = HexMesh(8, 8, 8)
+    nranks = 8
+    for kind in ("seq", "chunks", "rand"):
+        dm0 = initial_distribution(mesh, nranks, kind)
+        dm, times = distribute(dm0, time_phases=True)
+        sizes = [len(c) for c in dm.cells]
+        print(f"{kind:7s}: cells/rank={min(sizes)}..{max(sizes)}  "
+              f"migration={times['migration']*1e3:6.1f}ms  "
+              f"local_setup={times['local_setup']*1e3:5.1f}ms")
+    vsf = make_vertex_sf(dm)
+    nl = [dm.local_verts[r].shape[0] for r in range(nranks)]
+    counts = np.concatenate([
+        np.array([(dm.cone_local[r] == li).sum() for li in range(nl[r])],
+                 dtype=np.float32) for r in range(nranks)])
+    summed = local_to_global(vsf, 1, counts)
+    lo = vsf.leaf_offsets()
+    owners_see_8 = all(
+        np.all(summed[lo[r]: lo[r] + nl[r]][dm.vertex_owner[r] == r] == 8)
+        for r in range(nranks))
+    print(f"ghost assembly: every owned vertex counts 8 incident hexes -> "
+          f"{owners_see_8}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""repro.core — the star-forest (PetscSF) communication layer in JAX.
+
+Public API:
+
+  StarForest, RankGraph      graph template + setup (two-sided info)
+  SFOps                      jit/grad-friendly ops on global arrays
+  DistSF                     shard_map lowering to jax.lax collectives
+  compose, compose_inverse, embed_roots, embed_leaves, make_multi_sf
+  patterns.analyze           §5.2 pattern discovery / collective selection
+"""
+
+from .graph import RankGraph, StarForest, ragged_offsets
+from .mpiops import Op, get_op
+from .ops import PendingComm, SFOps
+from .plan import GlobalPlan, PaddedPlan, build_global_plan, build_padded_plan
+from .compose import (compose, compose_inverse, embed_leaves, embed_roots,
+                      identity_sf, make_multi_sf)
+from .distributed import DistPending, DistSF, pad_ragged, unpad_ragged
+from . import patterns, simulate
+
+__all__ = [
+    "RankGraph", "StarForest", "ragged_offsets",
+    "Op", "get_op",
+    "PendingComm", "SFOps",
+    "GlobalPlan", "PaddedPlan", "build_global_plan", "build_padded_plan",
+    "compose", "compose_inverse", "embed_leaves", "embed_roots",
+    "identity_sf", "make_multi_sf",
+    "DistPending", "DistSF", "pad_ragged", "unpad_ragged",
+    "patterns", "simulate",
+]

@@ -1,0 +1,188 @@
+"""SF composition and embedding (paper §3.3).
+
+``compose(A, B)``         — A's leaves overlap B's roots; result AB has A's
+                            roots and B's leaves (data redistribution chains).
+``compose_inverse(A, B)`` — A's leaves overlap B's *leaves*; B's roots have
+                            degree <= 1; result has A's roots and B's roots
+                            as leaves.
+``embed_roots / embed_leaves`` — drop all edges except those touching the
+                            selected roots/leaves, *without* remapping
+                            indices, so the embedded SF communicates on the
+                            original data buffers (field segregation /
+                            subgraph extraction).
+
+These are host-side graph algebra on the template (numpy), matching how
+PETSc builds them once at setup time.  The distributed construction the paper
+describes (SFBcast of root addresses over B) is exactly what these loops
+compute; with the template globally known the bcast is a gather.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import RankGraph, StarForest
+
+__all__ = ["compose", "compose_inverse", "embed_roots", "embed_leaves",
+           "identity_sf", "make_multi_sf"]
+
+
+def identity_sf(sizes: Sequence[int]) -> StarForest:
+    """SF whose rank-r leaves connect 1:1 to rank-r roots (nroots=sizes[r])."""
+    sf = StarForest(len(sizes))
+    for r, n in enumerate(sizes):
+        remote = np.stack([np.full(n, r, dtype=np.int64),
+                           np.arange(n, dtype=np.int64)], axis=1)
+        sf.set_graph(r, n, None, remote, nleafspace=n)
+    return sf.setup()
+
+
+def _leaf_root_addr(sf: StarForest, rank: int) -> np.ndarray:
+    """(nleafspace, 2) array: for each leaf-space position, the (rank, offset)
+    of its root, or (-1, -1) for holes.  This is the paper's 'bcast A.remote
+    over B' payload, available locally on the leaf owner."""
+    g = sf.graph(rank)
+    addr = np.full((g.nleafspace, 2), -1, dtype=np.int64)
+    addr[g.local, 0] = g.remote_rank
+    addr[g.local, 1] = g.remote_offset
+    return addr
+
+
+def compose(A: StarForest, B: StarForest) -> StarForest:
+    """Paper: PetscSFCompose.  Requires A's leaf space on each rank to cover
+    B's root space (B roots index into A's leaf space)."""
+    A.setup(); B.setup()
+    if A.nranks != B.nranks:
+        raise ValueError("A and B must live on the same communicator")
+    R = A.nranks
+    addr = [_leaf_root_addr(A, m) for m in range(R)]
+    sf = StarForest(R)
+    for q in range(R):
+        gB = B.graph(q)
+        loc: List[int] = []
+        rem: List[Tuple[int, int]] = []
+        for i in range(gB.nleaves):
+            m = int(gB.remote_rank[i])     # rank owning B's root
+            o = int(gB.remote_offset[i])   # = position in A's leaf space on m
+            if o >= A.graph(m).nleafspace:
+                raise ValueError("B root offset outside A leaf space")
+            p, ro = addr[m][o]
+            if p < 0:
+                continue                   # A-hole: no bridge, edge vanishes
+            loc.append(int(gB.local[i]))
+            rem.append((int(p), int(ro)))
+        sf.set_graph(q, A.graph(q).nroots, loc, np.asarray(rem).reshape(-1, 2),
+                     nleafspace=gB.nleafspace)
+    return sf.setup()
+
+
+def compose_inverse(A: StarForest, B: StarForest) -> StarForest:
+    """Paper: PetscSFComposeInverse.  A and B share their leaf space; every B
+    root must have degree <= 1.  Result: A's roots -> B's roots (as leaves)."""
+    A.setup(); B.setup()
+    if A.nranks != B.nranks:
+        raise ValueError("A and B must live on the same communicator")
+    R = A.nranks
+    for r in range(R):
+        if (B.degrees(r) > 1).any():
+            raise ValueError("compose_inverse requires B root degree <= 1")
+    addrA = [_leaf_root_addr(A, m) for m in range(R)]
+    # For each B edge (root (m',o') -> leaf (m,pos)): if A has a leaf at
+    # (m,pos) with root (p,ro), then AB edge (p,ro) -> leaf (m',o').
+    # Leaves of AB live in B's root space. Build per leaf-owner rank m'.
+    edges_by_rank: List[List[Tuple[int, int, int]]] = [[] for _ in range(R)]
+    for m in range(R):
+        gB = B.graph(m)
+        for i in range(gB.nleaves):
+            pos = int(gB.local[i])
+            if pos >= A.graph(m).nleafspace:
+                continue
+            p, ro = addrA[m][pos]
+            if p < 0:
+                continue
+            mp = int(gB.remote_rank[i])   # owner of B root
+            op = int(gB.remote_offset[i])
+            edges_by_rank[mp].append((op, int(p), int(ro)))
+    sf = StarForest(R)
+    for r in range(R):
+        es = sorted(edges_by_rank[r])
+        loc = [e[0] for e in es]
+        rem = [(e[1], e[2]) for e in es]
+        sf.set_graph(r, A.graph(r).nroots, loc, np.asarray(rem).reshape(-1, 2),
+                     nleafspace=B.graph(r).nroots)
+    return sf.setup()
+
+
+def embed_roots(sf: StarForest, selected: Sequence[np.ndarray]) -> StarForest:
+    """Paper: PetscSFCreateEmbeddedRootSF.  ``selected[r]`` lists retained
+    root offsets on rank r.  Indices are NOT remapped."""
+    sf.setup()
+    R = sf.nranks
+    keep = [np.zeros(sf.graph(r).nroots, dtype=bool) for r in range(R)]
+    for r in range(R):
+        sel = np.asarray(selected[r], dtype=np.int64)
+        keep[r][sel] = True
+    out = StarForest(R)
+    for q in range(R):
+        g = sf.graph(q)
+        mask = np.array([keep[int(p)][int(o)]
+                         for p, o in zip(g.remote_rank, g.remote_offset)],
+                        dtype=bool) if g.nleaves else np.zeros(0, bool)
+        rem = np.stack([g.remote_rank[mask], g.remote_offset[mask]], axis=1) \
+            if g.nleaves else np.zeros((0, 2))
+        out.set_graph(q, g.nroots, g.local[mask], rem, nleafspace=g.nleafspace)
+    return out.setup()
+
+
+def embed_leaves(sf: StarForest, selected: Sequence[np.ndarray]) -> StarForest:
+    """Paper: PetscSFCreateEmbeddedLeafSF.  ``selected[r]`` lists retained
+    leaf-space positions on rank r."""
+    sf.setup()
+    out = StarForest(sf.nranks)
+    for q in range(sf.nranks):
+        g = sf.graph(q)
+        selset = set(int(s) for s in np.asarray(selected[q]).tolist())
+        mask = np.array([int(l) in selset for l in g.local], dtype=bool) \
+            if g.nleaves else np.zeros(0, bool)
+        rem = np.stack([g.remote_rank[mask], g.remote_offset[mask]], axis=1) \
+            if g.nleaves else np.zeros((0, 2))
+        out.set_graph(q, g.nroots, g.local[mask], rem, nleafspace=g.nleafspace)
+    return out.setup()
+
+
+def make_multi_sf(sf: StarForest) -> StarForest:
+    """Paper §3.2: the multi-SF of ``sf`` — roots split into one slot per
+    edge (degree many), each leaf connected to its own slot.  Built with the
+    fetch-and-add offset assignment the paper describes, executed on the
+    template."""
+    sf.setup()
+    R = sf.nranks
+    # Per-rank multi-root counts and per-root base offsets.
+    bases = []
+    nmulti = []
+    for p in range(R):
+        deg = sf.degrees(p)
+        b = np.zeros(deg.shape[0] + 1, dtype=np.int64)
+        np.cumsum(deg, out=b[1:])
+        bases.append(b[:-1])
+        nmulti.append(int(deg.sum()))
+    counter = [np.zeros(sf.graph(p).nroots, dtype=np.int64) for p in range(R)]
+    # Assign slots in the deterministic (leaf rank, edge index) order — the
+    # same order fetch-and-add would observe.
+    new_remote = [np.zeros((sf.graph(q).nleaves, 2), dtype=np.int64)
+                  for q in range(R)]
+    for q in range(R):
+        g = sf.graph(q)
+        for i in range(g.nleaves):
+            p = int(g.remote_rank[i]); o = int(g.remote_offset[i])
+            slot = bases[p][o] + counter[p][o]
+            counter[p][o] += 1
+            new_remote[q][i] = (p, slot)
+    multi = StarForest(R)
+    for q in range(R):
+        g = sf.graph(q)
+        multi.set_graph(q, nmulti[q], g.local.copy(), new_remote[q],
+                        nleafspace=g.nleafspace)
+    return multi.setup()

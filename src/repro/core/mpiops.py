@@ -1,0 +1,146 @@
+"""Reduction-op registry: the ``MPI_Op`` analogue for SF operations.
+
+Each op provides the pieces every execution path needs:
+  * ``combine(a, b)``     elementwise combine (numpy or jnp arrays),
+  * ``identity(dtype)``   identity element,
+  * ``segment(data, seg_ids, num)`` deterministic segment reduction (jnp),
+  * ``scatter(target, idx, vals)``  jnp ``.at[]`` update for duplicate-free
+                                    index sets (bcast unpack).
+
+``REPLACE`` overwrites the destination (paper: MPI_REPLACE); with duplicate
+destinations PETSc leaves the winner unspecified — we *define* it as the last
+edge in the deterministic (leaf rank, edge index) order and precompute the
+winner at plan-build time, so results are reproducible across backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Op", "get_op", "REPLACE", "SUM", "PROD", "MAX", "MIN", "LOR", "LAND"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    name: str
+    combine: Callable          # (a, b) -> a ⊕ b
+    np_combine: Callable
+    identity_of: Callable      # dtype -> scalar identity
+    segment: Callable          # (data, segment_ids, num_segments) -> reduced
+    at_update: str             # jnp .at[] method name for duplicate-free scatter
+    commutative: bool = True
+
+
+def _ident_sum(dtype):
+    return np.zeros((), dtype=dtype)
+
+
+def _ident_prod(dtype):
+    return np.ones((), dtype=dtype)
+
+
+def _ident_max(dtype):
+    d = np.dtype(dtype)
+    if d.kind == "f":
+        return np.array(-np.inf, dtype=d)
+    if d.kind == "b":
+        return np.array(False)
+    return np.array(np.iinfo(d).min, dtype=d)
+
+
+def _ident_min(dtype):
+    d = np.dtype(dtype)
+    if d.kind == "f":
+        return np.array(np.inf, dtype=d)
+    if d.kind == "b":
+        return np.array(True)
+    return np.array(np.iinfo(d).max, dtype=d)
+
+
+SUM = Op(
+    "sum",
+    combine=lambda a, b: a + b,
+    np_combine=lambda a, b: a + b,
+    identity_of=_ident_sum,
+    segment=lambda d, s, n: jax.ops.segment_sum(d, s, num_segments=n),
+    at_update="add",
+)
+
+PROD = Op(
+    "prod",
+    combine=lambda a, b: a * b,
+    np_combine=lambda a, b: a * b,
+    identity_of=_ident_prod,
+    segment=lambda d, s, n: jax.ops.segment_prod(d, s, num_segments=n),
+    at_update="multiply",
+)
+
+MAX = Op(
+    "max",
+    combine=lambda a, b: jnp.maximum(a, b),
+    np_combine=np.maximum,
+    identity_of=_ident_max,
+    segment=lambda d, s, n: jax.ops.segment_max(d, s, num_segments=n),
+    at_update="max",
+)
+
+MIN = Op(
+    "min",
+    combine=lambda a, b: jnp.minimum(a, b),
+    np_combine=np.minimum,
+    identity_of=_ident_min,
+    segment=lambda d, s, n: jax.ops.segment_min(d, s, num_segments=n),
+    at_update="min",
+)
+
+LOR = Op(
+    "lor",
+    combine=lambda a, b: jnp.logical_or(a, b).astype(a.dtype),
+    np_combine=lambda a, b: np.logical_or(a, b).astype(np.asarray(a).dtype),
+    identity_of=lambda dt: np.zeros((), dtype=dt),
+    segment=lambda d, s, n: jax.ops.segment_max(d.astype(jnp.int32), s, num_segments=n).astype(d.dtype),
+    at_update="max",
+)
+
+LAND = Op(
+    "land",
+    combine=lambda a, b: jnp.logical_and(a, b).astype(a.dtype),
+    np_combine=lambda a, b: np.logical_and(a, b).astype(np.asarray(a).dtype),
+    identity_of=lambda dt: np.ones((), dtype=dt),
+    segment=lambda d, s, n: jax.ops.segment_min(d.astype(jnp.int32), s, num_segments=n).astype(d.dtype),
+    at_update="min",
+)
+
+# REPLACE: combine(a, b) = b. segment-reduction = take last element of each
+# segment (callers precompute last-writer indices instead; segment fn picks
+# max edge order which plan code arranges).
+REPLACE = Op(
+    "replace",
+    combine=lambda a, b: b,
+    np_combine=lambda a, b: b,
+    identity_of=lambda dt: np.zeros((), dtype=dt),
+    segment=None,  # handled specially via precomputed winners
+    at_update="set",
+    commutative=False,
+)
+
+_OPS = {o.name: o for o in [SUM, PROD, MAX, MIN, LOR, LAND, REPLACE]}
+# MPI-flavored aliases.
+_OPS.update({
+    "mpi_sum": SUM, "mpi_replace": REPLACE, "mpi_max": MAX, "mpi_min": MIN,
+    "mpi_prod": PROD, "mpi_lor": LOR, "mpi_land": LAND,
+})
+
+
+def get_op(op) -> Op:
+    if isinstance(op, Op):
+        return op
+    try:
+        return _OPS[str(op).lower()]
+    except KeyError:
+        raise ValueError(f"unknown SF op: {op!r}; have {sorted(set(_OPS))}")

@@ -1,0 +1,281 @@
+"""Communication plans: the setup-time products that make SF ops fast.
+
+``PetscSFSetUp`` is where the paper amortizes all index analysis (two-sided
+info, §5.1; pack pattern discovery, §5.2; NVSHMEM offset exchange, §5.4).
+The TPU analogue collected here:
+
+* ``GlobalPlan``  — edge arrays + deterministic-reduction machinery for the
+  single-program (global array) execution path in :mod:`repro.core.ops`.
+* ``PaddedPlan``  — per-rank, uniformly padded pack/unpack index matrices for
+  the shard_map all-to-all lowering in :mod:`repro.core.distributed`,
+  including the sort-segment replacement for CUDA atomics (DESIGN.md §3.3).
+
+Padding convention: data shards get one trailing *garbage row*; every padded
+index points at it, so packs/unpacks need no masks (stores to the garbage row
+are dropped when the shard is trimmed).  This mirrors the paper's trick of
+communicating from/to user buffers without extra branches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .graph import StarForest, ragged_offsets
+from . import patterns as pat
+
+__all__ = ["GlobalPlan", "PaddedPlan", "build_global_plan", "build_padded_plan"]
+
+
+def _exclusive_segment_starts(seg_ids: np.ndarray) -> np.ndarray:
+    """Position of the first element of each element's segment."""
+    if seg_ids.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    change = np.empty(seg_ids.size, dtype=bool)
+    change[0] = True
+    change[1:] = seg_ids[1:] != seg_ids[:-1]
+    starts = np.flatnonzero(change)
+    return starts[np.cumsum(change) - 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalPlan:
+    """Setup products for executing SF ops on *global* concatenated arrays."""
+
+    nroots: int
+    nleafspace: int
+    gr: np.ndarray            # (E,) global root id per edge (deterministic order)
+    gl: np.ndarray            # (E,) global leaf id per edge
+    # Reduce determinism: stable sort of edges by destination root.
+    red_perm: np.ndarray      # (E,) edge order sorted by (gr, edge order)
+    red_seg_root: np.ndarray  # (S,) destination root of each segment
+    red_seg_of_edge: np.ndarray  # (E,) segment id of sorted edge
+    red_seg_start: np.ndarray    # (E,) index (into sorted order) of segment head
+    replace_last: np.ndarray  # (S,) sorted-position of last edge per segment
+    # Multi-SF layout (paper §3.2): slot of each edge in multi-root space.
+    nmulti: int
+    multi_slot: np.ndarray    # (E,)
+    degrees: np.ndarray       # (nroots,) root degrees
+    pattern: pat.PatternReport = None
+
+    @property
+    def nedges(self) -> int:
+        return int(self.gr.shape[0])
+
+
+def build_global_plan(sf: StarForest) -> GlobalPlan:
+    edges = sf.edges_global()
+    gr, gl = edges[:, 0], edges[:, 1]
+    E = gr.shape[0]
+    perm = np.argsort(gr, kind="stable")
+    gr_s = gr[perm]
+    if E:
+        change = np.empty(E, dtype=bool)
+        change[0] = True
+        change[1:] = gr_s[1:] != gr_s[:-1]
+        seg_of = np.cumsum(change) - 1
+        seg_root = gr_s[np.flatnonzero(change)]
+        seg_start = _exclusive_segment_starts(gr_s)
+        # last position per segment
+        last = np.flatnonzero(np.append(change[1:], True))
+    else:
+        seg_of = np.zeros(0, dtype=np.int64)
+        seg_root = np.zeros(0, dtype=np.int64)
+        seg_start = np.zeros(0, dtype=np.int64)
+        last = np.zeros(0, dtype=np.int64)
+
+    degrees = np.zeros(sf.nroots_total, dtype=np.int64)
+    np.add.at(degrees, gr, 1)
+    base = np.zeros(sf.nroots_total + 1, dtype=np.int64)
+    np.cumsum(degrees, out=base[1:])
+    # occurrence index of each sorted edge within its root = pos - seg_start
+    occ = np.arange(E, dtype=np.int64) - seg_start
+    multi_slot = np.zeros(E, dtype=np.int64)
+    multi_slot[perm] = base[gr_s] + occ
+
+    return GlobalPlan(
+        nroots=sf.nroots_total,
+        nleafspace=sf.nleafspace_total,
+        gr=gr, gl=gl,
+        red_perm=perm,
+        red_seg_root=seg_root,
+        red_seg_of_edge=seg_of,
+        red_seg_start=seg_start,
+        replace_last=last,
+        nmulti=int(degrees.sum()),
+        multi_slot=multi_slot,
+        degrees=degrees,
+        pattern=pat.analyze(sf),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedPlan:
+    """Uniform per-rank arrays for the shard_map lowering.
+
+    Shard shapes: root shards ``(root_pad, *unit)`` and leaf shards
+    ``(leaf_pad, *unit)``; both include a final garbage row, i.e.
+    ``root_pad = max(nroots) + 1``.  ``P`` is the max per-pair message count
+    (the padded slot count of the dense all-to-all buffer).
+    """
+
+    nranks: int
+    root_pad: int             # incl. garbage row
+    leaf_pad: int             # incl. garbage row
+    nroots: np.ndarray        # (R,)
+    nleafspace: np.ndarray    # (R,)
+    P: int                    # padded per-pair slot count
+    counts: np.ndarray        # (R, R) counts[p, q], p=root rank, q=leaf rank
+    send_root_idx: np.ndarray  # (R, R, P) [p][q] root offsets (pad->garbage)
+    recv_leaf_idx: np.ndarray  # (R, R, P) [q][p] leaf positions (pad->garbage)
+    # self/local edges (paper §5.2 local/remote split)
+    self_pad: int
+    self_root_idx: np.ndarray  # (R, self_pad)
+    self_leaf_idx: np.ndarray  # (R, self_pad)
+    # Deterministic duplicate reduction at root side (sort-segment, §3.3):
+    # flattened recv buffer on rank r has R*P slots; self edges are appended
+    # after them (slots R*P .. R*P+self_pad-1) so one machinery covers both.
+    red_nslots: int
+    red_perm: np.ndarray       # (R, red_nslots) slot permutation (pad last)
+    red_inv_perm: np.ndarray   # (R, red_nslots) inverse permutation
+    red_dst: np.ndarray        # (R, red_nslots) root offset per sorted slot
+    red_seg_id: np.ndarray     # (R, red_nslots) segment id per sorted slot
+    red_seg_dst: np.ndarray    # (R, red_nslots) root offset per segment id
+    red_seg_start: np.ndarray  # (R, red_nslots) segment-head position
+    red_is_valid: np.ndarray   # (R, red_nslots) bool
+    replace_win_src: np.ndarray  # (R, win_pad) sorted-slot of winner
+    replace_win_dst: np.ndarray  # (R, win_pad) destination root offset
+    pattern: pat.PatternReport = None
+    permute_dst: Optional[List[int]] = None
+
+
+def build_padded_plan(sf: StarForest) -> PaddedPlan:
+    R = sf.nranks
+    nroots = np.array([sf.graph(r).nroots for r in range(R)], dtype=np.int64)
+    nleaf = np.array([sf.graph(r).nleafspace for r in range(R)], dtype=np.int64)
+    root_pad = int(nroots.max(initial=0)) + 1
+    leaf_pad = int(nleaf.max(initial=0)) + 1
+    root_garbage = root_pad - 1
+    leaf_garbage = leaf_pad - 1
+
+    counts = np.zeros((R, R), dtype=np.int64)
+    for pi in sf.pairs:
+        if pi.root_rank != pi.leaf_rank:
+            counts[pi.root_rank, pi.leaf_rank] = pi.count
+    P = max(int(counts.max(initial=0)), 1)
+
+    send_root_idx = np.full((R, R, P), root_garbage, dtype=np.int64)
+    recv_leaf_idx = np.full((R, R, P), leaf_garbage, dtype=np.int64)
+    self_counts = np.zeros(R, dtype=np.int64)
+    self_pairs = {}
+    for pi in sf.pairs:
+        p, q = pi.root_rank, pi.leaf_rank
+        if p == q:
+            self_counts[p] = pi.count
+            self_pairs[p] = pi
+        else:
+            send_root_idx[p, q, : pi.count] = pi.root_idx
+            recv_leaf_idx[q, p, : pi.count] = pi.leaf_idx
+    self_pad = max(int(self_counts.max(initial=0)), 1)
+    self_root_idx = np.full((R, self_pad), root_garbage, dtype=np.int64)
+    self_leaf_idx = np.full((R, self_pad), leaf_garbage, dtype=np.int64)
+    for p, pi in self_pairs.items():
+        self_root_idx[p, : pi.count] = pi.root_idx
+        self_leaf_idx[p, : pi.count] = pi.leaf_idx
+
+    # ---- deterministic reduce machinery (per root rank) ------------------
+    # Virtual slot space on rank r: R*P remote slots + self_pad local slots.
+    nslots = R * P + self_pad
+    red_perm = np.zeros((R, nslots), dtype=np.int64)
+    red_inv_perm = np.zeros((R, nslots), dtype=np.int64)
+    red_dst = np.full((R, nslots), root_garbage, dtype=np.int64)
+    red_seg_id = np.zeros((R, nslots), dtype=np.int64)
+    red_seg_dst = np.full((R, nslots), root_garbage, dtype=np.int64)
+    red_seg_start = np.zeros((R, nslots), dtype=np.int64)
+    red_is_valid = np.zeros((R, nslots), dtype=bool)
+    win_lists: List[Tuple[np.ndarray, np.ndarray]] = []
+    for r in range(R):
+        dst = np.full(nslots, root_garbage, dtype=np.int64)
+        # order key: the deterministic (leaf rank q, edge index) order.
+        order = np.full(nslots, np.iinfo(np.int64).max, dtype=np.int64)
+        for q in range(R):
+            pi = sf.pair(r, q)
+            if pi is None or q == r:
+                continue
+            slots = q * P + np.arange(pi.count)
+            dst[slots] = pi.root_idx
+            order[slots] = q * (10 ** 12) + pi.edge_idx
+        pi = self_pairs.get(r)
+        if pi is not None:
+            slots = R * P + np.arange(pi.count)
+            dst[slots] = pi.root_idx
+            order[slots] = r * (10 ** 12) + pi.edge_idx
+        valid = dst != root_garbage
+        # sort slots by (dst, order); invalid last.
+        key_dst = np.where(valid, dst, np.iinfo(np.int64).max)
+        perm = np.lexsort((order, key_dst))
+        dst_s = dst[perm]
+        valid_s = valid[perm]
+        red_perm[r] = perm
+        red_inv_perm[r][perm] = np.arange(nslots)
+        red_dst[r] = np.where(valid_s, dst_s, root_garbage)
+        seg_start = _exclusive_segment_starts(dst_s)
+        red_seg_start[r] = seg_start
+        red_is_valid[r] = valid_s
+        # static segment ids and per-segment destination (garbage slots form
+        # trailing segments that land in the garbage row)
+        if nslots:
+            change = np.empty(nslots, dtype=bool)
+            change[0] = True
+            change[1:] = dst_s[1:] != dst_s[:-1]
+            seg_ids = np.cumsum(change) - 1
+            red_seg_id[r] = seg_ids
+            heads = np.flatnonzero(change)
+            seg_dst = np.where(valid_s[heads], dst_s[heads], root_garbage)
+            red_seg_dst[r, : heads.size] = seg_dst
+        # replace winners: last valid position of each valid segment
+        if valid_s.any():
+            v_pos = np.flatnonzero(valid_s)
+            d = dst_s[v_pos]
+            is_last = np.append(d[1:] != d[:-1], True)
+            win_pos = v_pos[is_last]
+            win_lists.append((win_pos, dst_s[win_pos]))
+        else:
+            win_lists.append((np.zeros(0, np.int64), np.zeros(0, np.int64)))
+
+    win_pad = max(max((w[0].size for w in win_lists), default=0), 1)
+    replace_win_src = np.zeros((R, win_pad), dtype=np.int64)
+    replace_win_dst = np.full((R, win_pad), root_garbage, dtype=np.int64)
+    for r, (wsrc, wdst) in enumerate(win_lists):
+        replace_win_src[r, : wsrc.size] = wsrc
+        replace_win_dst[r, : wdst.size] = wdst
+
+    rep = pat.analyze(sf)
+    return PaddedPlan(
+        nranks=R,
+        root_pad=root_pad,
+        leaf_pad=leaf_pad,
+        nroots=nroots,
+        nleafspace=nleaf,
+        P=P,
+        counts=counts,
+        send_root_idx=send_root_idx,
+        recv_leaf_idx=recv_leaf_idx,
+        self_pad=self_pad,
+        self_root_idx=self_root_idx,
+        self_leaf_idx=self_leaf_idx,
+        red_nslots=nslots,
+        red_perm=red_perm,
+        red_inv_perm=red_inv_perm,
+        red_dst=red_dst,
+        red_seg_id=red_seg_id,
+        red_seg_dst=red_seg_dst,
+        red_seg_start=red_seg_start,
+        red_is_valid=red_is_valid,
+        replace_win_src=replace_win_src,
+        replace_win_dst=replace_win_dst,
+        pattern=rep,
+        permute_dst=rep.permute_dst,
+    )

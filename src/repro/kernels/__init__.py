@@ -1,0 +1,13 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), wrapped in ops.py,
+oracled in ref.py.  All validated in interpret mode on CPU; compiled by
+Mosaic on real TPUs.
+"""
+
+from .ops import (default_interpret, flash_attention, sf_pack,
+                  sf_pack_strided, sf_unpack, spmv_ell)
+from . import ref
+
+__all__ = ["default_interpret", "flash_attention", "sf_pack",
+           "sf_pack_strided", "sf_unpack", "spmv_ell", "ref"]

@@ -1,0 +1,59 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to "True unless running on a real TPU", so the same
+call sites validate on CPU (Pallas interpret mode) and compile to Mosaic on
+TPU.  Each wrapper has a pure-jnp oracle in :mod:`repro.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .sf_pack import pack as _pack, pack_strided as _pack_strided
+from .sf_unpack import segment_reduce_sorted, unpack_segments
+from .spmv_ell import spmv_ell as _spmv_ell
+
+__all__ = [
+    "default_interpret", "sf_pack", "sf_pack_strided", "sf_unpack",
+    "flash_attention", "spmv_ell", "ref",
+]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sf_pack(data, idx, *, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _pack(data, jnp.asarray(idx), interpret=interpret)
+
+
+def sf_pack_strided(data, *, start, dims, strides, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _pack_strided(data, start=int(start), dims=tuple(int(d) for d in dims),
+                         strides=tuple(int(s) for s in strides),
+                         interpret=interpret)
+
+
+def sf_unpack(target, buf_sorted, seg_start, seg_len, seg_dst, *, op="sum",
+              interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return unpack_segments(target, buf_sorted, np.asarray(seg_start),
+                           np.asarray(seg_len), np.asarray(seg_dst), op=op,
+                           interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    block_q=128, block_k=128, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def spmv_ell(data, cols, x, *, block_rows=256, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _spmv_ell(data, cols, x, block_rows=block_rows, interpret=interpret)

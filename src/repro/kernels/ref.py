@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pack_ref", "pack_strided_ref", "unpack_segment_ref",
+    "flash_attention_ref", "spmv_ell_ref",
+]
+
+
+def pack_ref(data: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather-pack: out[i] = data[idx[i]] (paper §5.2 rootbuf packing)."""
+    return jnp.take(data, idx, axis=0)
+
+
+def pack_strided_ref(data: jnp.ndarray, start: int, dims, strides) -> jnp.ndarray:
+    """Parametric 3D-subdomain pack (paper §5.2 ¶3): no index array."""
+    dx, dy, dz = dims
+    sx, sy, sz = strides
+    i = jnp.arange(dx)[None, None, :] * sx
+    j = jnp.arange(dy)[None, :, None] * sy
+    k = jnp.arange(dz)[:, None, None] * sz
+    rows = (start + (i + j + k)).reshape(-1)
+    return jnp.take(data, rows, axis=0)
+
+
+def unpack_segment_ref(buf: jnp.ndarray, seg_ids: jnp.ndarray,
+                       num_segments: int, op: str = "sum") -> jnp.ndarray:
+    """Segment-reduce of a (sorted-by-destination) packed buffer — the
+    sort-segment replacement for CUDA atomic unpacks (DESIGN.md §3.3)."""
+    if op == "sum":
+        return jax.ops.segment_sum(buf, seg_ids, num_segments=num_segments)
+    if op == "max":
+        return jax.ops.segment_max(buf, seg_ids, num_segments=num_segments)
+    if op == "min":
+        return jax.ops.segment_min(buf, seg_ids, num_segments=num_segments)
+    if op == "prod":
+        return jax.ops.segment_prod(buf, seg_ids, num_segments=num_segments)
+    raise ValueError(op)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int | None = None,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Plain softmax attention oracle.
+
+    q: (Sq, H, D); k, v: (Skv, Hkv, D) with H a multiple of Hkv (GQA).
+    Returns (Sq, H, D).  ``window``: sliding-window size (None = full).
+    Positions are aligned at the *end* (q position i corresponds to absolute
+    position Skv - Sq + i), matching decode with a prefix KV cache.
+    """
+    Sq, H, D = q.shape
+    Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + (Skv - Sq)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("hqk,khd->qhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def spmv_ell_ref(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """ELL sparse matrix-vector product oracle: y[i] = Σ_k data[i,k] * x[cols[i,k]].
+    Padding entries carry col index pointing at a trailing zero of x (caller
+    appends it) or value 0."""
+    return jnp.einsum("nk,nk->n", data, jnp.take(x, cols, axis=0))

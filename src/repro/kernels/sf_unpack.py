@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: SF unpack-with-reduction (the CUDA-atomics replacement).
+
+Paper §5.3: GPU unpacks run one CUDA thread per packed entry and need atomics
+when leaf/root indices repeat (e.g. SFReduce in MatMultTranspose).  TPU has
+no global atomics and hates scattered stores, so the TPU-native design
+(DESIGN.md §3.3) is:
+
+  1. at *setup* time, sort the packed-slot order by destination row
+     (amortized over every operation on the SF template, like all PetscSF
+     index analysis);
+  2. at run time, a grid step loads a bounded panel of sorted rows and
+     reduces the runs belonging to each destination *segment* entirely in
+     VMEM/VREGs, emitting one dense row per segment;
+  3. the caller scatters the per-segment results to their destination rows
+     with a *duplicate-free* scatter (trivially deterministic).
+
+The kernel below implements step 2: a segment reduction over a sorted buffer
+with per-segment (start, length) metadata in scalar-prefetch SMEM.  Each grid
+step handles one segment; the panel height ``Lmax`` (max segment length,
+padded to the VPU sublane count) bounds the VMEM working set.
+
+Supported ops: sum, max, min, prod (replace is handled by the caller via the
+precomputed last-writer trick and never reaches this kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["unpack_segments", "segment_reduce_sorted"]
+
+_INIT = {
+    "sum": lambda dt: jnp.zeros((), dt),
+    "prod": lambda dt: jnp.ones((), dt),
+    "max": lambda dt: jnp.array(-jnp.inf if jnp.issubdtype(dt, jnp.floating)
+                                else jnp.iinfo(dt).min, dt),
+    "min": lambda dt: jnp.array(jnp.inf if jnp.issubdtype(dt, jnp.floating)
+                                else jnp.iinfo(dt).max, dt),
+}
+
+_COMBINE = {
+    "sum": lambda a, b: a + b,
+    "prod": lambda a, b: a * b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def _make_kernel(op: str, Lmax: int):
+    combine = _COMBINE[op]
+
+    def kernel(meta_ref, buf_ref, out_ref):
+        # meta_ref: (2, S) SMEM — row 0: segment start, row 1: segment length.
+        # buf_ref:  (Lmax, U) panel starting at this segment's first row.
+        s = pl.program_id(0)
+        length = meta_ref[1, s]
+        panel = buf_ref[...]
+        dt = panel.dtype
+        init = _INIT[op](dt)
+        rows = jax.lax.broadcasted_iota(jnp.int32, panel.shape, 0)
+        masked = jnp.where(rows < length, panel, init)
+        if op == "sum":
+            red = jnp.sum(masked, axis=0, keepdims=True)
+        elif op == "prod":
+            red = jnp.prod(masked, axis=0, keepdims=True)
+        elif op == "max":
+            red = jnp.max(masked, axis=0, keepdims=True)
+        else:
+            red = jnp.min(masked, axis=0, keepdims=True)
+        out_ref[...] = red.astype(dt)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "Lmax", "op", "interpret"))
+def segment_reduce_sorted(buf: jnp.ndarray, seg_start: jnp.ndarray,
+                          seg_len: jnp.ndarray, *, num_segments: int,
+                          Lmax: int, op: str = "sum", interpret: bool = True
+                          ) -> jnp.ndarray:
+    """Reduce sorted rows into per-segment rows.
+
+    buf:       (M, U) rows sorted by destination; padded with >= Lmax extra
+               rows so every panel load is in bounds (caller pads).
+    seg_start: (S,) first row of each segment.
+    seg_len:   (S,) segment length (<= Lmax).
+    Returns (num_segments, U).
+    """
+    U = int(buf.shape[1])
+    meta = jnp.stack([seg_start.astype(jnp.int32),
+                      seg_len.astype(jnp.int32)], axis=0)
+    return pl.pallas_call(
+        _make_kernel(op, Lmax),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(num_segments,),
+            in_specs=[pl.BlockSpec((pl.Element(Lmax), U),
+                                   lambda s, meta_ref: (meta_ref[0, s], 0))],
+            out_specs=pl.BlockSpec((1, U), lambda s, meta_ref: (s, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_segments, U), buf.dtype),
+        interpret=interpret,
+    )(meta, buf)
+
+
+def unpack_segments(target: jnp.ndarray, buf_sorted: jnp.ndarray,
+                    seg_start: np.ndarray, seg_len: np.ndarray,
+                    seg_dst: np.ndarray, *, op: str = "sum",
+                    interpret: bool = True) -> jnp.ndarray:
+    """Full unpack: segment-reduce the sorted buffer, then one duplicate-free
+    scatter into ``target`` rows ``seg_dst`` with reduction ``op``.
+
+    Setup-time metadata (seg_start/len/dst) comes from the SF plan's sorted
+    slot machinery (:mod:`repro.core.plan`).
+    """
+    S = int(seg_dst.shape[0])
+    if S == 0:
+        return target
+    Lmax = max(int(np.max(seg_len)), 1)
+    # pad buffer so the last panel load stays in bounds
+    pad = jnp.zeros((Lmax, buf_sorted.shape[1]), buf_sorted.dtype)
+    buf_p = jnp.concatenate([buf_sorted, pad], axis=0)
+    red = segment_reduce_sorted(buf_p, jnp.asarray(seg_start),
+                                jnp.asarray(seg_len), num_segments=S,
+                                Lmax=Lmax, op=op, interpret=interpret)
+    at = target.at[seg_dst]
+    method = {"sum": at.add, "prod": at.multiply, "max": at.max,
+              "min": at.min}[op]
+    return method(red.astype(target.dtype), unique_indices=True)

@@ -1,0 +1,368 @@
+"""Loop-weighted static cost analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each computation ONCE — a ``lax.scan``
+over 88 layers reports one layer's FLOPs (verified empirically; see
+EXPERIMENTS.md §Roofline methodology).  For roofline math over deeply
+scanned models that is off by ~two orders of magnitude, so this module
+re-derives per-device cost from the optimized HLO text with *loop
+multiplicities*:
+
+  1. split the module into computations;
+  2. build the call graph (while bodies/conditions, fusions, calls,
+     conditionals);
+  3. extract while trip counts from their condition computations
+     (`compare(iv, constant(N)), direction=LT` pattern emitted by lax.scan);
+  4. propagate multiplicity from ENTRY through the graph;
+  5. per instruction: dot/convolution FLOPs from explicit shapes and
+     contracting dims; HBM bytes from operand+result sizes of *top-level*
+     (fusion-boundary) instructions; collective bytes per collective op,
+     all weighted by their computation's multiplicity.
+
+The result feeds the three roofline terms (compute / memory / collective).
+All quantities are PER DEVICE (post-partitioning shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    transcendentals: float = 0.0
+    while_trip_counts: List[int] = dataclasses.field(default_factory=list)
+    unresolved_whiles: int = 0
+
+    def merge_scaled(self, other: "HloCost", k: float) -> None:
+        self.flops += other.flops * k
+        self.bytes_accessed += other.bytes_accessed * k
+        self.collective_bytes += other.collective_bytes * k
+        self.transcendentals += other.transcendentals * k
+        for kk, v in other.collective_counts.items():
+            self.collective_counts[kk] = self.collective_counts.get(kk, 0) \
+                + int(v * k)
+        for kk, v in other.collective_bytes_by_kind.items():
+            self.collective_bytes_by_kind[kk] = \
+                self.collective_bytes_by_kind.get(kk, 0.0) + v * k
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    result_type: str
+    opcode: str
+    body: str          # full text after '='
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: List[_Instr]
+    is_fusion: bool
+
+    def symbol_table(self) -> Dict[str, str]:
+        return {i.name: i.result_type for i in self.instrs}
+
+    def operand_types(self, ins: _Instr) -> List[str]:
+        """Result types of the instruction's operands (this HLO dialect
+        prints operands as bare %names; shapes resolve via the local table)."""
+        table = self.symbol_table()
+        depth = 0
+        end = len(ins.body)
+        for i, ch in enumerate(ins.body):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        names = re.findall(r"%([\w\.\-]+)", ins.body[:end])
+        return [table[n] for n in names if n in table]
+
+
+def _split_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    # header: `%name (args...) -> type {` — args may contain nested parens
+    header_re = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+    # result type is either a tuple "(...)" (may contain /*index=N*/ comments
+    # and '=' inside them) or a plain shape token
+    instr_re = re.compile(
+        r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\((?:[^()]|\([^()]*\))*\)|\S+)"
+        r"\s+([\w\-]+)\((.*)$")
+    for line in text.splitlines():
+        s = line.strip()
+        if not s:
+            continue
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = header_re.match(s)
+            if m:
+                name = m.group(2)
+                cur = _Computation(name, [],
+                                   is_fusion=name.startswith("fused") or
+                                   ".fused" in name)
+                comps[name] = cur
+                if m.group(1):
+                    comps["__entry__"] = cur
+            continue
+        if s.startswith("}"):
+            continue
+        m = instr_re.match(line)
+        if m and cur is not None:
+            cur.instrs.append(_Instr(m.group(2), m.group(3), m.group(4),
+                                     m.group(5)))
+    return comps
+
+
+_CALLSITE_RE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations|calls|"
+    r"true_computation|false_computation)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+
+
+def _trip_count(cond: _Computation) -> Optional[int]:
+    """lax.scan cond: ROOT compare(iv, const) direction=LT (or const first)."""
+    const_vals = {}
+    for ins in cond.instrs:
+        mm = re.match(r"constant\((\d+)\)", ins.body)
+        if mm and ins.result_type.startswith(("s32", "u32", "s64")):
+            const_vals[ins.name] = int(mm.group(1))
+    for ins in cond.instrs:
+        if ins.opcode == "compare" and "direction=LT" in ins.body:
+            args = re.findall(r"%([\w\.\-]+)", ins.body.split(")")[0])
+            for a in args:
+                if a in const_vals:
+                    return const_vals[a]
+    # fallback: any s32 constant in the cond
+    if len(const_vals) == 1:
+        return next(iter(const_vals.values()))
+    return None
+
+
+def _instr_flops(ins: _Instr, comp: "_Computation") -> Tuple[float, float]:
+    """(flops, transcendentals) for one instruction."""
+    op = ins.opcode
+    if op in ("dot", "dot-general"):
+        out_elems = _shape_elems(ins.result_type)
+        ops_t = comp.operand_types(ins)
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.body)
+        k = 1
+        if ops_t and cm and cm.group(1):
+            dims_m = _SHAPE_RE.search(ops_t[0])
+            dims = [int(d) for d in dims_m.group(2).split(",") if d] \
+                if dims_m and dims_m.group(2) else []
+            for ci in cm.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    k *= dims[ci]
+        return 2.0 * out_elems * max(k, 1), 0.0
+    if op == "convolution":
+        out_elems = _shape_elems(ins.result_type)
+        return 2.0 * out_elems, 0.0   # conservative (no conv hot paths here)
+    if op in ("exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+              "power", "sine", "cosine", "exponential-minus-one"):
+        return float(_shape_elems(ins.result_type)), \
+            float(_shape_elems(ins.result_type))
+    if op in ("add", "subtract", "multiply", "divide", "maximum", "minimum",
+              "compare", "select", "and", "or", "xor", "negate", "abs",
+              "floor", "ceil", "clamp"):
+        return float(_shape_elems(ins.result_type)), 0.0
+    if op in ("reduce", "reduce-window"):
+        ops_t = comp.operand_types(ins)
+        return float(_shape_elems(ops_t[0]) if ops_t else 0), 0.0
+    return 0.0, 0.0
+
+
+_SLICE_OPS = ("dynamic-slice", "gather")
+
+
+def _instr_bytes(ins: _Instr, comp: "_Computation",
+                 comps: Dict[str, "_Computation"]) -> float:
+    """Approximate HBM traffic of one top-level instruction.
+
+    Slice-type ops physically touch only the slice: a loop body's
+    dynamic-slice of a layer-stacked weight reads ONE layer per trip, so
+    billing the whole operand would overcount by the trip count.  For
+    fusions, parameters consumed exclusively by slice ops inside are billed
+    at the consumers' result sizes, and a dynamic-update-slice root is
+    billed at its update size (read-modify-write) instead of the full
+    result."""
+    op = ins.opcode
+    if op in _SLICE_OPS:
+        return 2.0 * _shape_bytes(ins.result_type)
+    if op == "dynamic-update-slice":
+        ops_t = comp.operand_types(ins)
+        upd = _shape_bytes(ops_t[1]) if len(ops_t) > 1 else 0
+        return 2.0 * upd
+    if op == "scatter":
+        ops_t = comp.operand_types(ins)
+        upd = _shape_bytes(ops_t[-1]) if ops_t else 0
+        return 3.0 * upd
+    if op == "fusion":
+        m = re.search(r"calls=%?([\w\.\-]+)", ins.body)
+        callee = comps.get(m.group(1)) if m else None
+        ops_t = comp.operand_types(ins)
+        total = 0.0
+        if callee is not None:
+            params = [i for i in callee.instrs if i.opcode == "parameter"]
+            # map param order -> consumers
+            for pi, p in enumerate(params):
+                consumers = [i for i in callee.instrs
+                             if re.search(r"%" + re.escape(p.name) + r"\b",
+                                          i.body)]
+                if consumers and all(c.opcode in _SLICE_OPS
+                                     for c in consumers):
+                    total += sum(_shape_bytes(c.result_type)
+                                 for c in consumers)
+                elif pi < len(ops_t):
+                    total += _shape_bytes(ops_t[pi])
+            root = callee.instrs[-1] if callee.instrs else None
+            if root is not None and root.opcode == "dynamic-update-slice":
+                r_ops = callee.operand_types(root)
+                total += 2.0 * (_shape_bytes(r_ops[1]) if len(r_ops) > 1
+                                else 0)
+            else:
+                total += _shape_bytes(ins.result_type)
+            return total
+    b = _shape_bytes(ins.result_type)
+    for ot in comp.operand_types(ins):
+        b += _shape_bytes(ot)
+    return b
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # call edges: (caller comp name) -> list of (callee, weight)
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    unresolved = 0
+    trip_of_body: Dict[str, int] = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.body)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.body)
+                # preferred: XLA annotates the resolved trip count
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.body)
+                trip = int(tm.group(1)) if tm else None
+                if trip is None and cm and cm.group(1) in comps:
+                    trip = _trip_count(comps[cm.group(1)])
+                if trip is None:
+                    trip = 1
+                    unresolved += 1
+                if bm:
+                    edges[cname].append((bm.group(1), float(trip)))
+                    trip_of_body[bm.group(1)] = trip
+            else:
+                for m in _CALLSITE_RE.finditer(ins.body):
+                    for callee in re.split(r",\s*%?", m.group(1)):
+                        if callee in comps:
+                            edges[cname].append((callee, 1.0))
+
+    entry_name = entry.name
+    # multiplicity = sum over callsites of caller_mult * edge_weight.
+    # HLO call graphs are DAGs; memoized top-down with a cycle guard.
+    callers_of: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for caller, outs in edges.items():
+        for callee, k in outs:
+            callers_of[callee].append((caller, k))
+
+    memo: Dict[str, float] = {}
+
+    def compute_mult(name: str, stack=()) -> float:
+        if name == entry_name:
+            return 1.0
+        if name in memo:
+            return memo[name]
+        if name in stack:
+            return 0.0
+        total = 0.0
+        for caller, k in callers_of.get(name, []):
+            total += compute_mult(caller, stack + (name,)) * k
+        memo[name] = total
+        return total
+
+    cost = HloCost(unresolved_whiles=unresolved,
+                   while_trip_counts=sorted(set(trip_of_body.values())))
+    mults = {name: compute_mult(name) for name in comps
+             if name != "__entry__"}
+
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        w = mults.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        for ins in comp.instrs:
+            f, t = _instr_flops(ins, comp)
+            cost.flops += f * w
+            cost.transcendentals += t * w
+            if not comp.is_fusion and ins.opcode not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "while", "bitcast", "copy"):
+                cost.bytes_accessed += _instr_bytes(ins, comp, comps) * w
+            if any(ins.opcode.startswith(c) for c in _COLLECTIVES):
+                kind = ins.opcode
+                nb = _shape_bytes(ins.result_type)
+                cost.collective_bytes += nb * w
+                cost.collective_counts[kind] = \
+                    cost.collective_counts.get(kind, 0) + max(int(w), 1)
+                cost.collective_bytes_by_kind[kind] = \
+                    cost.collective_bytes_by_kind.get(kind, 0.0) + nb * w
+    return cost

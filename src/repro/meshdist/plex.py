@@ -1,0 +1,275 @@
+"""DMPlex-lite: distributed unstructured-mesh topology on star forests.
+
+Paper §4.2/§6.3: meshes are represented by points (cells, vertices) with a
+cone (adjacency) relation; *all* parallel operations — partitioning
+migration, ghost exchange, dof layout — are expressed as PetscSFs derived
+mechanically from a point SF plus PetscSections.  This module reproduces
+that pipeline on a periodic structured hex mesh (the paper's §6.3 test is a
+fully periodic 128³ hex mesh):
+
+  * ``HexMesh``      — global topology template (cells -> 8 vertices).
+  * ``DistributedMesh`` — per-rank owned cells, cones in global vertex ids,
+    local vertex numbering, vertex coordinates.
+  * ``initial_distribution`` — the paper's Seq / Chunks / Rand layouts.
+  * ``distribute``   — migration driven by a cell SF (SFBcast moves cones,
+    labels and coordinates), then local setup (vertex dedup, ghost vertex SF
+    via lowest-owner rule).
+  * ``global_to_local`` / ``local_to_global`` — DMGlobalToLocal /
+    DMLocalToGlobal over the section-derived dof SF.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import SFOps, StarForest
+from .section import Section, apply_section
+
+__all__ = ["HexMesh", "DistributedMesh", "initial_distribution",
+           "distribute", "make_vertex_sf", "global_to_local",
+           "local_to_global"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HexMesh:
+    """Fully periodic structured hex mesh: nx*ny*nz cells and vertices."""
+    nx: int
+    ny: int
+    nz: int
+
+    @property
+    def ncells(self) -> int:
+        return self.nx * self.ny * self.nz
+
+    @property
+    def nvertices(self) -> int:
+        return self.nx * self.ny * self.nz
+
+    def cell_cone(self, cells: np.ndarray) -> np.ndarray:
+        """(n, 8) vertex ids of each cell's corners (periodic wrap)."""
+        nx, ny, nz = self.nx, self.ny, self.nz
+        i = cells % nx
+        j = (cells // nx) % ny
+        k = cells // (nx * ny)
+        out = np.empty((cells.shape[0], 8), dtype=np.int64)
+        c = 0
+        for dk in (0, 1):
+            for dj in (0, 1):
+                for di in (0, 1):
+                    ii = (i + di) % nx
+                    jj = (j + dj) % ny
+                    kk = (k + dk) % nz
+                    out[:, c] = ii + nx * jj + nx * ny * kk
+                    c += 1
+        return out
+
+    def vertex_coords(self, verts: np.ndarray) -> np.ndarray:
+        nx, ny = self.nx, self.ny
+        i = verts % nx
+        j = (verts // nx) % ny
+        k = verts // (nx * ny)
+        return np.stack([i / self.nx, j / self.ny, k / self.nz],
+                        axis=1).astype(np.float32)
+
+
+@dataclasses.dataclass
+class DistributedMesh:
+    mesh: HexMesh
+    nranks: int
+    cells: List[np.ndarray]            # global cell ids per rank
+    cones: List[np.ndarray]            # (n, 8) global vertex ids per rank
+    labels: List[np.ndarray]           # (n,) integer labels per rank
+    # local setup products
+    local_verts: List[np.ndarray] = None      # unique global vertex ids
+    cone_local: List[np.ndarray] = None       # cones in local vertex numbers
+    coords: List[np.ndarray] = None           # (nverts_local, 3)
+    vertex_owner: List[np.ndarray] = None     # owner rank per local vertex
+
+    def setup_local(self) -> "DistributedMesh":
+        """Local (re)numbering after migration: dedup vertices, local cones,
+        coordinates — the 'final local setup' timed in paper Fig 11."""
+        self.local_verts, self.cone_local, self.coords = [], [], []
+        for r in range(self.nranks):
+            cone = self.cones[r]
+            verts, inv = np.unique(cone.reshape(-1), return_inverse=True)
+            self.local_verts.append(verts)
+            self.cone_local.append(inv.reshape(cone.shape).astype(np.int64))
+            self.coords.append(self.mesh.vertex_coords(verts))
+        # lowest-sharer-rank ownership
+        first_owner: Dict[int, int] = {}
+        for r in range(self.nranks):
+            for v in self.local_verts[r]:
+                vv = int(v)
+                if vv not in first_owner or r < first_owner[vv]:
+                    first_owner[vv] = r
+        self.vertex_owner = [
+            np.asarray([first_owner[int(v)] for v in self.local_verts[r]],
+                       dtype=np.int64)
+            for r in range(self.nranks)]
+        return self
+
+
+def initial_distribution(mesh: HexMesh, nranks: int, kind: str,
+                         seed: int = 0) -> DistributedMesh:
+    """Paper §6.3 initial layouts: 'seq' (all on rank 0), 'chunks'
+    (lexicographic blocks), 'rand' (random owner per cell)."""
+    n = mesh.ncells
+    all_cells = np.arange(n, dtype=np.int64)
+    if kind == "seq":
+        owner = np.zeros(n, dtype=np.int64)
+    elif kind == "chunks":
+        owner = (all_cells * nranks) // n
+    elif kind == "rand":
+        owner = np.random.default_rng(seed).integers(0, nranks, n)
+    else:
+        raise ValueError(kind)
+    cells = [all_cells[owner == r] for r in range(nranks)]
+    cones = [mesh.cell_cone(c) for c in cells]
+    labels = [c % 7 for c in cells]   # arbitrary persistent cell label
+    return DistributedMesh(mesh, nranks, cells, cones, labels)
+
+
+def _partition_balanced(mesh: HexMesh, nranks: int) -> np.ndarray:
+    """Target partition: balanced lexicographic blocks (stand-in for the
+    graph partitioner, which the paper excludes from its timings)."""
+    cells = np.arange(mesh.ncells, dtype=np.int64)
+    return (cells * nranks) // mesh.ncells
+
+
+def migration_sf(dm: DistributedMesh, target_owner: np.ndarray) -> StarForest:
+    """SF whose roots are current points and leaves the migrated points:
+    'based on the partition, we make a PetscSF whose roots are the original
+    mesh points and whose leaves are the redistributed mesh points so that
+    SFBcast would migrate the points' (paper §4.2)."""
+    R = dm.nranks
+    n = dm.mesh.ncells
+    # directory: current location of every global cell
+    cur_rank = np.empty(n, dtype=np.int64)
+    cur_off = np.empty(n, dtype=np.int64)
+    for r in range(R):
+        cur_rank[dm.cells[r]] = r
+        cur_off[dm.cells[r]] = np.arange(dm.cells[r].shape[0])
+    sf = StarForest(R)
+    for r in range(R):
+        mine = np.flatnonzero(target_owner == r).astype(np.int64)
+        remote = np.stack([cur_rank[mine], cur_off[mine]], axis=1) \
+            if mine.size else np.zeros((0, 2), np.int64)
+        sf.set_graph(r, int(dm.cells[r].shape[0]), None, remote,
+                     nleafspace=max(mine.size, 1))
+    return sf.setup()
+
+
+def distribute(dm: DistributedMesh,
+               target_owner: Optional[np.ndarray] = None,
+               time_phases: bool = False):
+    """Migrate the mesh to ``target_owner`` (default: balanced blocks).
+
+    Phases (timed separately when requested, as in Fig 11):
+      1. build migration SF;
+      2. SFBcast topology (cones, unit=8 ints), labels, and cell ids;
+      3. local setup on the new owners.
+    """
+    t0 = time.perf_counter()
+    mesh = dm.mesh
+    R = dm.nranks
+    if target_owner is None:
+        target_owner = _partition_balanced(mesh, R)
+    sf = migration_sf(dm, target_owner)
+    ops = SFOps(sf)
+    t1 = time.perf_counter()
+
+    def migrate(per_rank_arrays, unit_cols: int, dtype):
+        root = np.concatenate([np.asarray(a, dtype=dtype).reshape(-1, unit_cols)
+                               for a in per_rank_arrays]) \
+            if sum(a.shape[0] for a in per_rank_arrays) else \
+            np.zeros((0, unit_cols), dtype)
+        nls = sf.nleafspace_total
+        leaf = np.asarray(ops.bcast(jnp.asarray(root),
+                                    jnp.zeros((nls, unit_cols),
+                                              jnp.asarray(root).dtype),
+                                    "replace"))
+        lo = sf.leaf_offsets()
+        nleaves = [int((target_owner == r).sum()) for r in range(R)]
+        return [leaf[lo[r]: lo[r] + nleaves[r]] for r in range(R)]
+
+    new_cones = migrate(dm.cones, 8, np.int32)
+    new_labels = migrate([l.reshape(-1, 1) for l in dm.labels], 1, np.int32)
+    new_cells = migrate([c.reshape(-1, 1) for c in dm.cells], 1, np.int32)
+    t2 = time.perf_counter()
+
+    out = DistributedMesh(
+        mesh, R,
+        [c[:, 0].astype(np.int64) for c in new_cells],
+        [c.astype(np.int64) for c in new_cones],
+        [l[:, 0].astype(np.int64) for l in new_labels],
+    ).setup_local()
+    t3 = time.perf_counter()
+    if time_phases:
+        return out, {"sf_build": t1 - t0, "migration": t2 - t1,
+                     "local_setup": t3 - t2, "total": t3 - t0}
+    return out
+
+
+def make_vertex_sf(dm: DistributedMesh) -> StarForest:
+    """Point SF over vertices: every non-owned local vertex (leaf) connects
+    to its owner's copy (root) — the ghost-exchange SF of paper §4.2."""
+    R = dm.nranks
+    if dm.local_verts is None:
+        dm.setup_local()
+    # owner's local index of each global vertex
+    owner_idx: Dict[int, Tuple[int, int]] = {}
+    for r in range(R):
+        for li, v in enumerate(dm.local_verts[r]):
+            if dm.vertex_owner[r][li] == r:
+                owner_idx[int(v)] = (r, li)
+    sf = StarForest(R)
+    for r in range(R):
+        loc, rem = [], []
+        for li, v in enumerate(dm.local_verts[r]):
+            o, oi = owner_idx[int(v)]
+            if o != r:
+                loc.append(li)
+                rem.append((o, oi))
+        sf.set_graph(r, int(dm.local_verts[r].shape[0]), loc,
+                     np.asarray(rem, dtype=np.int64).reshape(-1, 2),
+                     nleafspace=max(int(dm.local_verts[r].shape[0]), 1))
+    return sf.setup()
+
+
+def global_to_local(vsf: StarForest, dof_per_vertex: int,
+                    global_vec: np.ndarray) -> np.ndarray:
+    """DMGlobalToLocal: owners push dof values to ghosts (SFBcast over the
+    dof-SF derived by applying the Section to the point SF)."""
+    sections = [Section.from_sizes(np.full(vsf.graph(r).nroots,
+                                           dof_per_vertex, np.int64))
+                for r in range(vsf.nranks)]
+    leaf_sections = [Section.from_sizes(np.full(vsf.graph(r).nleafspace,
+                                                dof_per_vertex, np.int64))
+                     for r in range(vsf.nranks)]
+    dof_sf = apply_section(vsf, sections, leaf_sections)
+    ops = SFOps(dof_sf)
+    out = ops.bcast(jnp.asarray(global_vec),
+                    jnp.asarray(global_vec.copy()), "replace")
+    return np.asarray(out)
+
+
+def local_to_global(vsf: StarForest, dof_per_vertex: int,
+                    local_vec: np.ndarray) -> np.ndarray:
+    """DMLocalToGlobal (ADD_VALUES): ghosts accumulate into owners (SFReduce)
+    — the assembly step of FE/FV discretizations (paper §4.2)."""
+    sections = [Section.from_sizes(np.full(vsf.graph(r).nroots,
+                                           dof_per_vertex, np.int64))
+                for r in range(vsf.nranks)]
+    leaf_sections = [Section.from_sizes(np.full(vsf.graph(r).nleafspace,
+                                                dof_per_vertex, np.int64))
+                     for r in range(vsf.nranks)]
+    dof_sf = apply_section(vsf, sections, leaf_sections)
+    ops = SFOps(dof_sf)
+    out = ops.reduce(jnp.asarray(local_vec), jnp.asarray(local_vec.copy()),
+                     "sum")
+    return np.asarray(out)

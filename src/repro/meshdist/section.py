@@ -1,0 +1,107 @@
+"""PetscSection analogue: map points to variable-size data, derive dof-SFs.
+
+Paper §4.2: "with an initial mesh point PetscSF, applying a PetscSection
+mapping mesh points to degrees-of-freedom generates a new dof-PetscSF".
+This module implements that *mechanical* derivation: given a point SF and
+per-root data sizes, build the SF relating the packed dof arrays.  The same
+mechanism routes variable-length sparse-matrix rows (repro.sparse.parmat)
+and mesh fields (repro.meshdist.plex).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import SFOps, StarForest
+
+__all__ = ["Section", "apply_section"]
+
+
+@dataclasses.dataclass
+class Section:
+    """Packed layout: point p owns ``sizes[p]`` dofs at ``offsets[p]``."""
+    sizes: np.ndarray
+    offsets: np.ndarray   # exclusive prefix, len = npoints + 1
+
+    @staticmethod
+    def from_sizes(sizes: Sequence[int]) -> "Section":
+        sizes = np.asarray(sizes, dtype=np.int64)
+        off = np.zeros(sizes.shape[0] + 1, dtype=np.int64)
+        np.cumsum(sizes, out=off[1:])
+        return Section(sizes, off)
+
+    @property
+    def total(self) -> int:
+        return int(self.offsets[-1])
+
+
+def apply_section(point_sf: StarForest, root_sections: List[Section],
+                  leaf_sections: List[Section] | None = None) -> StarForest:
+    """Derive the dof-SF from a point-SF and per-rank root sections.
+
+    Every point edge (root point -> leaf point) expands into ``size`` dof
+    edges.  Leaf dof layout: if ``leaf_sections`` is None, leaf dofs are
+    packed in point-edge order on each rank (the layout a fetch of
+    variable-size records produces); otherwise the given leaf sections give
+    each leaf point's dof offsets (ghost updates into existing layouts).
+
+    The root dof *sizes* must first be made known at the leaves; PETSc does
+    this with an SFBcast of the section — we do the same through SFOps.
+    """
+    point_sf.setup()
+    R = point_sf.nranks
+    # 1) bcast root sizes and offsets to leaves (the PetscSection bcast)
+    ops = SFOps(point_sf)
+    root_sizes = np.concatenate([s.sizes for s in root_sections]) \
+        if root_sections else np.zeros(0, np.int64)
+    root_offs = np.concatenate([s.offsets[:-1] for s in root_sections]) \
+        if root_sections else np.zeros(0, np.int64)
+    nls = point_sf.nleafspace_total
+    leaf_sizes = np.asarray(ops.bcast(jnp.asarray(root_sizes),
+                                      jnp.zeros(nls, jnp.int32), "replace"))
+    leaf_offs = np.asarray(ops.bcast(jnp.asarray(root_offs),
+                                     jnp.zeros(nls, jnp.int32), "replace"))
+
+    lo = point_sf.leaf_offsets()
+    dof_sf = StarForest(R)
+    for q in range(R):
+        g = point_sf.graph(q)
+        sizes_q = leaf_sizes[lo[q]: lo[q + 1]]
+        offs_q = leaf_offs[lo[q]: lo[q + 1]]
+        loc: List[int] = []
+        rem: List[tuple] = []
+        if leaf_sections is None:
+            # leaf dofs packed in edge order
+            cursor = 0
+            for i in range(g.nleaves):
+                l = int(g.local[i])
+                sz = int(sizes_q[l])
+                ro = int(offs_q[l])
+                p = int(g.remote_rank[i])
+                for d in range(sz):
+                    loc.append(cursor)
+                    rem.append((p, ro + d))
+                    cursor += 1
+            nleafspace = max(cursor, 1)
+        else:
+            lsec = leaf_sections[q]
+            for i in range(g.nleaves):
+                l = int(g.local[i])
+                sz = int(sizes_q[l])
+                ro = int(offs_q[l])
+                p = int(g.remote_rank[i])
+                base = int(lsec.offsets[l])
+                if int(lsec.sizes[l]) != sz:
+                    raise ValueError("leaf section size mismatch with root")
+                for d in range(sz):
+                    loc.append(base + d)
+                    rem.append((p, ro + d))
+            nleafspace = max(lsec.total, 1)
+        dof_sf.set_graph(q, root_sections[q].total, loc,
+                         np.asarray(rem, dtype=np.int64).reshape(-1, 2),
+                         nleafspace=nleafspace)
+    return dof_sf.setup()

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+The token→expert-slot assignment is literally a star forest (tokens = leaves,
+expert slots = roots; DESIGN.md §4): the dispatch below is the GSPMD-friendly
+dense formulation of that SF — a per-group stable sort by expert id replaces
+the fetch-and-add slot allocation, and the scatter/gather to the expert-
+sharded buffer lowers to the same all-to-all the SF general path would issue.
+
+Grouping: tokens are dispatched in G independent groups (vmapped), so the
+sort never crosses the data-parallel shard boundary — G = batch rows for
+training shapes, G = 1 for tiny decode batches (auto).
+
+Expert weights are stacked (E, D, F) and sharded over the model axis (EP) and
+the data axis (FSDP); the expert compute is a single einsum over the sharded
+buffer, which is what the MXU wants.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import mlp
+
+__all__ = ["init_moe", "moe_layer"]
+
+
+def init_moe(key, cfg: ModelConfig, layers: int) -> Dict:
+    D, E, F = cfg.d_model, cfg.moe_experts, cfg.moe_dff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(D)
+    so = 1.0 / np.sqrt(F) / np.sqrt(2 * cfg.n_layers)
+    p = {
+        "router": (jax.random.normal(ks[0], (layers, D, E)) * s).astype(jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (layers, E, D, F)) * s).astype(dt),
+        "w_gate": (jax.random.normal(ks[2], (layers, E, D, F)) * s).astype(dt),
+        "w_out": (jax.random.normal(ks[3], (layers, E, F, D)) * so).astype(dt),
+    }
+    if cfg.moe_shared_ff:
+        Fs = cfg.moe_shared_ff
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared_in"] = (jax.random.normal(k1, (layers, D, Fs)) * s).astype(dt)
+        p["shared_gate"] = (jax.random.normal(k2, (layers, D, Fs)) * s).astype(dt)
+        p["shared_out"] = (jax.random.normal(k3, (layers, Fs, D)) * so).astype(dt)
+    return p
+
+
+def _dispatch_group(x, eidx, w, C: int, E: int):
+    """One group's dispatch.  x: (T, D); eidx: (T, k) expert ids; w: (T, k)
+    combine weights.  Returns (buf (E*C, D), slot (T, k), keep (T, k))."""
+    T, k = eidx.shape
+    flat_e = eidx.reshape(-1)
+    tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within expert run
+    first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos = jnp.arange(T * k) - first[sorted_e]
+    keep_s = pos < C
+    slot_s = jnp.where(keep_s, sorted_e * C + pos, E * C)  # E*C = drop slot
+    # un-sort slot/keep to (T, k) order
+    inv = jnp.argsort(order, stable=True)
+    slot = slot_s[inv].reshape(T, k)
+    keep = keep_s[inv].reshape(T, k)
+    buf = jnp.zeros((E * C + 1, x.shape[1]), x.dtype)
+    buf = buf.at[slot.reshape(-1)].add(
+        x[tok] * keep.reshape(-1)[:, None].astype(x.dtype))
+    return buf[:-1], slot, keep
+
+
+def moe_layer(x: jnp.ndarray, p: Dict, cfg: ModelConfig, *,
+              groups: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss).  Router in fp32; top-k softmax over the
+    selected logits; capacity C = ceil(S_g * k * cf / E) per group.
+
+    The expert einsums run on the full (G, E, C, D) buffer *outside* the
+    per-group vmap so the EP sharding constraints (groups over dp, experts
+    over model) pin the buffer layout — the scatter into / gather out of it
+    is the SF all-to-all (DESIGN.md §4)."""
+    from .sharding import constrain
+    B, S, D = x.shape
+    E, k = cfg.moe_experts, cfg.moe_topk
+    G = groups if groups is not None else (B if S > 1 else 1)
+    T = (B * S) // G
+    xg = constrain(x.reshape(G, T, D))
+
+    logits = constrain(jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                                  p["router"]))
+    probs = jax.nn.softmax(logits, axis=-1)
+    wk, eidx = jax.lax.top_k(probs, k)                  # (G, T, k)
+    wk = (wk / jnp.sum(wk, axis=-1, keepdims=True)).astype(x.dtype)
+
+    C = max(int(np.ceil(T * k * cfg.moe_capacity / E)), 1)
+
+    buf, slot, keep = jax.vmap(
+        lambda xg1, e1, w1: _dispatch_group(xg1, e1, w1, C, E))(xg, eidx, wk)
+    h = constrain(buf.reshape(G, E, C, D), model_dim=1)   # EP layout
+    up = jnp.einsum("gecd,edf->gecf", h, p["w_in"])
+    gate = jnp.einsum("gecd,edf->gecf", h, p["w_gate"])
+    out = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up, p["w_out"])
+    out_flat = constrain(out.reshape(G, E * C, D))
+
+    def combine(of, slot1, keep1, w1):
+        gathered = of[jnp.minimum(slot1, E * C - 1)]          # (T, k, D)
+        gathered = gathered * keep1[..., None].astype(of.dtype)
+        return jnp.einsum("tkd,tk->td", gathered, w1.astype(of.dtype))
+
+    y = jax.vmap(combine)(out_flat, slot, keep, wk).reshape(B, S, D)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    onehot_top1 = jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    if cfg.moe_shared_ff:
+        shared = (jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_in"])) \
+            @ p["shared_out"]
+        y = y + shared
+    return y, aux

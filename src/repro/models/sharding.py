@@ -1,0 +1,198 @@
+"""Sharding rules: params / optimizer / activations / caches → PartitionSpec.
+
+Mesh axes (launch/mesh.py): ``pod`` (inter-pod DCI), ``data`` (DP/FSDP/ZeRO),
+``model`` (TP/EP).  Rules:
+
+  * weights: TP-shard the "wide" axis over ``model``; FSDP-shard the other
+    matrix axis over ``data`` (ZeRO-3 style — params, grads and optimizer
+    states all inherit the same spec, so optimizer state is fully sharded).
+  * MoE expert stacks: experts over ``model`` (EP) and d_model over ``data``.
+  * embeddings / lm_head: vocab over ``model``, d_model over ``data``.
+  * batch axes: over ``(pod, data)``.
+  * KV caches: batch over ``(pod, data)`` when batch >= dp size, kv-heads
+    over ``model`` when divisible, else sequence over ``model``.
+  * layer-stacked leading L axis is never sharded.
+
+These are *rules by leaf path*, so they apply to every architecture family
+uniformly; per-arch overrides (e.g. sequence sharding for long-context) hang
+off the config.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+__all__ = ["param_specs", "batch_spec", "cache_specs", "dp_axes",
+           "shardings"]
+
+DP = ("pod", "data")   # flattened data-parallel axes (pod may be absent)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in DP if a in mesh.axis_names)
+
+
+def _spec_for_leaf(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                   mesh: Mesh) -> P:
+    """Assign a PartitionSpec to one parameter leaf by its tree path."""
+    model_ax = "model" if "model" in mesh.axis_names else None
+    data_ax = "data" if "data" in mesh.axis_names else None
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+
+    def ok(dim, size):   # shardable?
+        return size is not None and dim % int(size) == 0
+
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    # vocab-carrying tensors
+    if name == "embed":
+        v, d = shape
+        return P(model_ax if ok(v, msize) else None,
+                 data_ax if ok(d, dsize) else None)
+    if name == "lm_head":
+        d, v = shape
+        return P(data_ax if ok(d, dsize) else None,
+                 model_ax if ok(v, msize) else None)
+
+    # MoE expert stacks (L, E, D, F) / router (L, D, E)
+    if name in ("w_in", "w_gate", "w_out") and nd == 4:
+        L, E, a, b = shape
+        return P(None, model_ax if ok(E, msize) else None,
+                 data_ax if ok(a, dsize) else None, None)
+    if name == "router":
+        return P(None, data_ax if ok(shape[1], dsize) else None, None)
+
+    # attention / mlp matrices, layer-stacked (L, in, out)
+    wide_out = {"wq", "wk", "wv", "w_in", "w_gate", "in_proj", "gate_proj",
+                "shared_in", "shared_gate", "m_wq", "m_wk", "m_wv", "m_wo",
+                "s_wz", "s_wo"}
+    wide_in = {"wo", "w_out", "out_proj", "shared_out", "m_out", "s_out"}
+    if nd == 3 and name in wide_out:
+        L, din, dout = shape
+        return P(None, data_ax if ok(din, dsize) else None,
+                 model_ax if ok(dout, msize) else None)
+    if nd == 3 and name in wide_in:
+        L, din, dout = shape
+        return P(None, model_ax if ok(din, msize) else None,
+                 data_ax if ok(dout, dsize) else None)
+    # small/vector params: replicate
+    return P(*([None] * nd))
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree mirroring ``params``."""
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        return _spec_for_leaf(prefix, np.shape(tree), cfg, mesh)
+    return walk(params, "")
+
+
+def batch_spec(mesh: Mesh, *, seq_shard: bool = False) -> P:
+    """(B, S[, ...]) activations: batch over dp axes, optionally seq over
+    model (sequence parallelism)."""
+    dp = dp_axes(mesh)
+    if seq_shard and "model" in mesh.axis_names:
+        return P(dp, "model")
+    return P(dp)
+
+
+def cache_specs(cache, cfg: ModelConfig, mesh: Mesh, batch: int, s_max: int):
+    """Spec tree mirroring a decode cache from models.transformer.init_cache.
+
+    KV caches (L, B, S, Hkv, hd): batch over dp; kv-heads over ``model`` when
+    divisible, else the sequence axis (decode context parallelism), else
+    replicated on the model axis.  SSM/xLSTM states: batch over dp only.
+    """
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    msize = int(mesh.shape.get("model", 1))
+    b_ax = dp if dp and batch % max(dp_size, 1) == 0 else None
+    kv_heads_ok = cfg.n_kv_heads % max(msize, 1) == 0
+    seq_ok = s_max % max(msize, 1) == 0
+    if kv_heads_ok:
+        kv = P(None, b_ax, None, "model", None)
+    elif seq_ok:
+        kv = P(None, b_ax, "model", None, None)
+    else:
+        kv = P(None, b_ax, None, None, None)
+
+    def leaf_spec(path_names, leaf):
+        name = path_names[-1] if path_names else ""
+        nd = len(np.shape(leaf))
+        if name in ("k", "v", "ck", "cv") and nd == 5:
+            return kv
+        if name == "pos" or nd == 0:
+            return P()
+        # stacked states (L, B, ...): batch over dp
+        if nd >= 2:
+            return P(None, b_ax, *([None] * (nd - 2)))
+        return P(None)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: leaf_spec(
+            [getattr(k, "key", getattr(k, "name", "")) for k in kp], leaf),
+        cache)
+
+
+def shardings(mesh: Mesh, spec_tree):
+    """Map a PartitionSpec pytree to NamedShardings."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# activation sharding constraints (ambient mesh)
+# --------------------------------------------------------------------------
+def _ambient():
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if am is None or not am.axis_names:
+        return None
+    try:
+        if am.empty:
+            return None
+    except AttributeError:
+        pass
+    return am
+
+
+def constrain(x, *, batch_dim: int = 0, model_dim: Optional[int] = None):
+    """Pin an activation to (batch over dp axes[, model_dim over 'model']).
+
+    No-op outside a mesh context (smoke tests, single device).  Without
+    these pins, GSPMD may resolve FSDP-weight/batch axis conflicts by
+    *un-sharding the batch* — per-device buffers of global-batch extent,
+    caught by the dry-run memory analysis (EXPERIMENTS.md §Perf iter 1).
+    """
+    am = _ambient()
+    if am is None:
+        return x
+    names = am.axis_names
+    sizes = dict(zip(names, am.shape.values())) if hasattr(am, "shape") \
+        else {}
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    spec = [None] * x.ndim
+    if dp:
+        dpsize = int(np.prod([sizes.get(a, 1) for a in dp]))
+        if dpsize and x.shape[batch_dim] % dpsize == 0:
+            spec[batch_dim] = dp
+    if model_dim is not None and "model" in names:
+        ms = int(sizes.get("model", 1))
+        if ms and x.shape[model_dim] % ms == 0 and model_dim != batch_dim:
+            spec[model_dim] = "model"
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,126 @@
+"""Selective state-space (Mamba-family) heads for the hymba hybrid blocks.
+
+Hymba (arXiv:2411.13676) runs attention heads and SSM heads *in parallel*
+inside each block on the same input, then sums their (individually
+normalized) outputs.  The SSM here is a diagonal selective scan:
+
+    h_t = exp(-softplus(A) * Δ_t) ⊙ h_{t-1} + Δ_t * (u_t ⊗ B_t)
+    y_t = (h_t · C_t) * gate
+
+with per-head state (hd × N).  Training/prefill run a lax.scan over time;
+decode is a single O(1) state update — which is why the hybrid arch is the
+long_500k-capable family (DESIGN.md §4.1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+__all__ = ["init_ssm", "ssm_scan", "ssm_step"]
+
+
+def init_ssm(key, cfg: ModelConfig, layers: int) -> Dict:
+    D = cfg.d_model
+    Hm, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    P = Hm * hd
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(D)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (layers, D, P)) * s).astype(dt),
+        "gate_proj": (jax.random.normal(ks[1], (layers, D, P)) * s).astype(dt),
+        "out_proj": (jax.random.normal(ks[2], (layers, P, D))
+                     * (s / np.sqrt(2 * cfg.n_layers))).astype(dt),
+        "w_bc": (jax.random.normal(ks[3], (layers, Hm, hd, 2 * N))
+                 * (1.0 / np.sqrt(hd))).astype(dt),
+        "w_dt": (jax.random.normal(ks[4], (layers, Hm, hd)) * 0.01
+                 ).astype(jnp.float32),
+        "b_dt": jnp.log(jnp.expm1(jnp.full((layers, Hm), 0.01))
+                        ).astype(jnp.float32),
+        "a_log": jnp.tile(jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)),
+                          (layers, Hm, 1)),
+    }
+
+
+def _gates(u, p):
+    """u: (B, S|1, Hm, hd) -> Δ (B,S,Hm,1), Bc/Cc (B,S,Hm,N), A (Hm,N)."""
+    bc = jnp.einsum("bshd,hdn->bshn", u, p["w_bc"])
+    N = bc.shape[-1] // 2
+    Bc, Cc = bc[..., :N], bc[..., N:]
+    dt_raw = jnp.einsum("bshd,hd->bsh", u.astype(jnp.float32), p["w_dt"])
+    delta = jax.nn.softplus(dt_raw + p["b_dt"][None, None])[..., None]
+    A = -jnp.exp(p["a_log"])                               # (Hm, N) negative
+    return delta, Bc.astype(jnp.float32), Cc.astype(jnp.float32), A
+
+
+def ssm_scan(x: jnp.ndarray, p: Dict, cfg: ModelConfig,
+             h0: jnp.ndarray | None = None, time_chunk: int = 256
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y (B, S, D), h_final (B, Hm, hd, N)).
+
+    Time is scanned in rematerialized chunks: only chunk-boundary states are
+    saved for backward (O(S/chunk) memory instead of O(S) per-step
+    residuals) — without this, training a selective SSM at 4k×256 batch
+    stores the full per-step state history and blows HBM.
+    """
+    B, S, D = x.shape
+    Hm, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    u = (x @ p["in_proj"]).reshape(B, S, Hm, hd)
+    gate = jax.nn.silu(x @ p["gate_proj"]).reshape(B, S, Hm, hd)
+    delta, Bc, Cc, A = _gates(u, p)
+    if h0 is None:
+        h0 = jnp.zeros((B, Hm, hd, N), jnp.float32)
+
+    uf = u.astype(jnp.float32)
+
+    def step(h, inp):
+        u_t, d_t, B_t, C_t = inp        # (B,Hm,hd),(B,Hm,1),(B,Hm,N),(B,Hm,N)
+        decay = jnp.exp(A[None] * d_t)                 # (B, Hm, N)
+        h = h * decay[:, :, None, :] + (d_t[:, :, None] * u_t[..., None]) \
+            * B_t[:, :, None, :]
+        y = jnp.einsum("bhdn,bhn->bhd", h, C_t)
+        return h, y
+
+    C = min(time_chunk, S)
+    pad = (-S) % C
+    def tpad(a):   # (B, S, ...) -> (nchunks, C, B, ...)
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        a = a.swapaxes(0, 1)
+        return a.reshape((a.shape[0] // C, C) + a.shape[1:])
+
+    xs = tuple(tpad(a) for a in (uf, delta, Bc, Cc))
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk_body(h, chunk):
+        h, ys = jax.lax.scan(step, h, chunk)
+        return h, ys
+
+    h, ys = jax.lax.scan(chunk_body, h0, xs)           # ys: (nc, C, B, ...)
+    ys = ys.reshape((-1,) + ys.shape[2:])[:S].swapaxes(0, 1)
+    y = ys.astype(x.dtype) * gate
+    return y.reshape(B, S, Hm * hd) @ p["out_proj"], h
+
+
+def ssm_step(x: jnp.ndarray, p: Dict, cfg: ModelConfig, h: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step.  x: (B, 1, D); h: (B, Hm, hd, N)."""
+    B, _, D = x.shape
+    Hm, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    u = (x @ p["in_proj"]).reshape(B, 1, Hm, hd)
+    gate = jax.nn.silu(x @ p["gate_proj"]).reshape(B, 1, Hm, hd)
+    delta, Bc, Cc, A = _gates(u, p)
+    u_t, d_t = u[:, 0].astype(jnp.float32), delta[:, 0]
+    B_t, C_t = Bc[:, 0], Cc[:, 0]
+    decay = jnp.exp(A[None] * d_t)
+    h = h * decay[:, :, None, :] + (d_t[:, :, None] * u_t[..., None]) \
+        * B_t[:, :, None, :]
+    y = jnp.einsum("bhdn,bhn->bhd", h, C_t)[:, None].astype(x.dtype) * gate
+    return y.reshape(B, 1, Hm * hd) @ p["out_proj"], h

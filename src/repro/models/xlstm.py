@@ -1,0 +1,180 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory) cells with stabilized exponential gating.
+
+The 24-layer xlstm-350m config alternates mLSTM/sLSTM; the stack scans over
+*pairs* (mLSTM block then sLSTM block) so layer params stay stacked and the
+compiled HLO stays depth-independent.  Both cells are recurrences — training
+and prefill scan over time; decode is O(1) per step on the carried state,
+which is what qualifies this family for the long_500k shape.
+
+State per (batch, head):  mLSTM  C (hd × hd), n (hd), m ();  sLSTM  c, n, m
+(hd each).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import rmsnorm
+
+__all__ = ["init_xlstm_pair", "xlstm_pair_scan", "xlstm_pair_step",
+           "init_xlstm_state"]
+
+
+def _proj(key, shape, scale, dt):
+    return (jax.random.normal(key, shape) * scale).astype(dt)
+
+
+def init_xlstm_pair(key, cfg: ModelConfig, pairs: int) -> Dict:
+    """Params for (mLSTM, sLSTM) block pairs, stacked over ``pairs``."""
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    dt = jnp.dtype(cfg.dtype)
+    s = 1.0 / np.sqrt(D)
+    ks = jax.random.split(key, 14)
+    p = {
+        # ---- mLSTM
+        "m_norm": jnp.ones((pairs, D), dt),
+        "m_wq": _proj(ks[0], (pairs, D, D), s, dt),
+        "m_wk": _proj(ks[1], (pairs, D, D), s, dt),
+        "m_wv": _proj(ks[2], (pairs, D, D), s, dt),
+        "m_wi": _proj(ks[3], (pairs, D, H), s, jnp.float32),
+        "m_wf": _proj(ks[4], (pairs, D, H), s, jnp.float32),
+        "m_bf": jnp.full((pairs, H), 3.0, jnp.float32),   # open forget gates
+        "m_wo": _proj(ks[5], (pairs, D, D), s, dt),
+        "m_out": _proj(ks[6], (pairs, D, D), s / np.sqrt(2 * cfg.n_layers), dt),
+        # ---- sLSTM
+        "s_norm": jnp.ones((pairs, D), dt),
+        "s_wz": _proj(ks[7], (pairs, D, D), s, dt),
+        "s_wi": _proj(ks[8], (pairs, D, H), s, jnp.float32),
+        "s_wf": _proj(ks[9], (pairs, D, H), s, jnp.float32),
+        "s_bf": jnp.full((pairs, H), 3.0, jnp.float32),
+        "s_wo": _proj(ks[10], (pairs, D, D), s, dt),
+        "s_rz": _proj(ks[11], (pairs, H, hd, hd), 1.0 / np.sqrt(hd), dt),
+        "s_out": _proj(ks[12], (pairs, D, D), s / np.sqrt(2 * cfg.n_layers), dt),
+    }
+    return p
+
+
+def init_xlstm_state(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    f32 = jnp.float32
+    return {
+        "mC": jnp.zeros((batch, H, hd, hd), f32),
+        "mn": jnp.zeros((batch, H, hd), f32),
+        "mm": jnp.full((batch, H), -1e30, f32),
+        "sc": jnp.zeros((batch, H, hd), f32),
+        "sn": jnp.zeros((batch, H, hd), f32),
+        "sm": jnp.full((batch, H), -1e30, f32),
+        "sh": jnp.zeros((batch, H, hd), f32),
+    }
+
+
+def _mlstm_cell(q, k, v, i_raw, f_raw, C, n, m):
+    """Stabilized mLSTM update for one step (all heads).
+    q/k/v: (B, H, hd); i_raw/f_raw: (B, H)."""
+    logf = -jax.nn.softplus(-f_raw)              # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)[..., None]
+    f_g = jnp.exp(logf + m - m_new)[..., None]
+    C = f_g[..., None] * C + i_g[..., None] * (v[..., None] * k[..., None, :])
+    n = f_g * n + i_g * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    return num / den[..., None], C, n, m_new
+
+
+def _slstm_cell(z_raw, i_raw, f_raw, o_in, rz, c, n, m, h_prev):
+    """Stabilized sLSTM update; recurrent connection via per-head rz @ h."""
+    z = jnp.tanh(z_raw + jnp.einsum("bhd,hde->bhe", h_prev, rz))
+    logf = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)[..., None]
+    f_g = jnp.exp(logf + m - m_new)[..., None]
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(o_in) * c / jnp.maximum(n, 1.0)
+    return h, c, n, m_new
+
+
+def _pair_step_inner(x_t, p, cfg, st):
+    """One timestep through (mLSTM block, sLSTM block).  x_t: (B, D)."""
+    B, D = x_t.shape
+    H = cfg.n_heads
+    hd = D // H
+
+    # ---------- mLSTM block (pre-norm residual)
+    xa = rmsnorm(x_t, p["m_norm"], cfg.norm_eps)
+    q = (xa @ p["m_wq"]).reshape(B, H, hd)
+    k = (xa @ p["m_wk"]).reshape(B, H, hd) / np.sqrt(hd)
+    v = (xa @ p["m_wv"]).reshape(B, H, hd)
+    i_raw = xa.astype(jnp.float32) @ p["m_wi"]
+    f_raw = xa.astype(jnp.float32) @ p["m_wf"] + p["m_bf"]
+    h_m, C, n, m = _mlstm_cell(q.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), i_raw, f_raw,
+                               st["mC"], st["mn"], st["mm"])
+    o_gate = jax.nn.sigmoid(xa @ p["m_wo"])
+    y_m = (h_m.reshape(B, D).astype(x_t.dtype) * o_gate) @ p["m_out"]
+    x_t = x_t + y_m
+
+    # ---------- sLSTM block
+    xb = rmsnorm(x_t, p["s_norm"], cfg.norm_eps)
+    z_raw = (xb @ p["s_wz"]).reshape(B, H, hd).astype(jnp.float32)
+    i_raw = xb.astype(jnp.float32) @ p["s_wi"]
+    f_raw = xb.astype(jnp.float32) @ p["s_wf"] + p["s_bf"]
+    o_in = (xb @ p["s_wo"]).reshape(B, H, hd).astype(jnp.float32)
+    h_s, c, n2, m2 = _slstm_cell(z_raw, i_raw, f_raw, o_in,
+                                 p["s_rz"].astype(jnp.float32),
+                                 st["sc"], st["sn"], st["sm"], st["sh"])
+    y_s = (h_s.reshape(B, D)).astype(x_t.dtype) @ p["s_out"]
+    x_t = x_t + y_s
+    new_state = {"mC": C, "mn": n, "mm": m, "sc": c, "sn": n2, "sm": m2,
+                 "sh": h_s}
+    return x_t, new_state
+
+
+def xlstm_pair_scan(x: jnp.ndarray, p: Dict, cfg: ModelConfig, state: Dict,
+                    time_chunk: int = 128) -> Tuple[jnp.ndarray, Dict]:
+    """Run one (mLSTM, sLSTM) pair over a sequence.  x: (B, S, D).
+
+    Time runs in rematerialized chunks so backward stores only chunk-
+    boundary states (the mLSTM matrix memory C is (B, H, hd, hd) fp32 —
+    storing it per-step for a 4k sequence is petabytes at batch 256)."""
+    B, S, D = x.shape
+
+    def step(st, x_t):
+        y, st = _pair_step_inner(x_t, p, cfg, st)
+        return st, y
+
+    C = min(time_chunk, S)
+    pad = (-S) % C
+    xt = x.swapaxes(0, 1)                            # (S, B, D)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0), (0, 0)))
+    xt = xt.reshape(xt.shape[0] // C, C, B, D)
+
+    from functools import partial as _partial
+
+    @_partial(jax.checkpoint, prevent_cse=False)
+    def chunk_body(st, chunk):
+        st, ys = jax.lax.scan(step, st, chunk)
+        return st, ys
+
+    state, ys = jax.lax.scan(chunk_body, state, xt)
+    ys = ys.reshape((-1,) + ys.shape[2:])[:S].swapaxes(0, 1)
+    return ys, state
+
+
+def xlstm_pair_step(x: jnp.ndarray, p: Dict, cfg: ModelConfig, state: Dict
+                    ) -> Tuple[jnp.ndarray, Dict]:
+    """Decode: x (B, 1, D) -> (B, 1, D)."""
+    y, state = _pair_step_inner(x[:, 0], p, cfg, state)
+    return y[:, None], state

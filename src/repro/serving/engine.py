@@ -1,0 +1,203 @@
+"""Batched serving engine: prefill + decode with continuous-batching-lite.
+
+``ServeEngine`` owns one fixed-size decode batch of slots.  Requests are
+queued; whenever a slot frees (EOS or length), the next request is prefetched
+into it (prefill writes its KV into that slot's cache rows).  All active
+slots step together through one jitted decode_step per token — the standard
+TPU serving shape.  Prefill and decode are separate jitted programs, as in
+the dry-run cells (``prefill_32k`` lowers prefill, ``decode_32k`` /
+``long_500k`` lower the decode step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: List[int]
+    max_new: int = 32
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
+                 s_max: int = 512, eos_id: Optional[int] = None,
+                 greedy: bool = True, temperature: float = 1.0, seed: int = 0):
+        if cfg.block_kind == "xlstm":
+            raise NotImplementedError(
+                "slot-wise cache insert for recurrent archs: serve xlstm via "
+                "examples/serve_lm.py --arch with uniform batches")
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.s_max = s_max
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = T.init_cache(cfg, batch, s_max)
+        # slot-local decode position (cache['pos'] is per-batch scalar in the
+        # single-stream path; the engine keeps per-slot positions and uses
+        # the masked decode below)
+        self.positions = np.zeros(batch, dtype=np.int32)
+        self.active: List[Optional[Request]] = [None] * batch
+        self.queue: List[Request] = []
+
+        self._decode = jax.jit(partial(self._decode_impl, cfg))
+        self._prefill_cache = {}
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg = self.cfg
+
+            def fn(params, tokens):
+                return T.prefill(params, cfg, tokens=tokens, s_max=self.s_max)
+            self._prefill_cache[plen] = jax.jit(fn)
+        return self._prefill_cache[plen]
+
+    @staticmethod
+    def _decode_impl(cfg, params, tokens, cache, positions):
+        """Per-slot-position decode: like T.decode_step but each batch row
+        has its own position."""
+        # temporarily reuse decode_step by setting pos per row via vmap-style
+        # trick: decode_step uses a scalar pos; instead we inline the per-row
+        # version: positions (B,)
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+        from ..models.layers import rmsnorm, rope, attention_decode
+        B = x.shape[0]
+        blocks = params["blocks"]
+        pos = positions
+
+        def body(x, layer_in):
+            bp, ck, cv = layer_in
+            h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+            H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            q = (h @ bp["wq"]).reshape(B, 1, H, hd)
+            k = (h @ bp["wk"]).reshape(B, 1, Hkv, hd)
+            v = (h @ bp["wv"]).reshape(B, 1, Hkv, hd)
+            if cfg.qk_norm:
+                q = rmsnorm(q, bp["q_norm"], cfg.norm_eps)
+                k = rmsnorm(k, bp["k_norm"], cfg.norm_eps)
+            # per-row rope + cache write
+            def rope1(u, p_):
+                # u: (H, hd), p_: scalar -> rope at one absolute position
+                return rope(u[None], p_[None], cfg.rope_theta)[0]
+            q = jax.vmap(rope1)(q[:, 0], pos)[:, None]     # (B, 1, H, hd)
+            k = jax.vmap(rope1)(k[:, 0], pos)[:, None]
+            ck = jax.vmap(
+                lambda c, kk, p_: jax.lax.dynamic_update_slice(
+                    c, kk.astype(c.dtype), (p_, 0, 0)))(ck, k[:, 0][:, None],
+                                                        pos)
+            cv = jax.vmap(
+                lambda c, vv, p_: jax.lax.dynamic_update_slice(
+                    c, vv.astype(c.dtype), (p_, 0, 0)))(cv, v[:, 0][:, None],
+                                                        pos)
+            rep = H // Hkv
+            scale = 1.0 / np.sqrt(hd)
+            kf = jnp.repeat(ck.astype(jnp.float32), rep, axis=2)
+            vf = jnp.repeat(cv.astype(jnp.float32), rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * scale
+            kpos = jnp.arange(ck.shape[1])
+            mask = kpos[None] <= pos[:, None]
+            if cfg.attn_window:
+                mask &= kpos[None] > pos[:, None] - cfg.attn_window
+            s = jnp.where(mask[:, None, None, :], s, -1e30)
+            pr = jax.nn.softmax(s, axis=-1)
+            attn = jnp.einsum("bhqk,bkhd->bqhd", pr, vf).astype(x.dtype)
+            x = x + attn.reshape(B, 1, H * hd) @ bp["wo"]
+            h2 = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                from ..models.moe import moe_layer
+                ff, _ = moe_layer(h2, bp, cfg)
+                x = x + ff
+            elif cfg.d_ff:
+                from ..models.layers import mlp
+                x = x + mlp(h2, bp, cfg)
+            return x, {"k": ck, "v": cv}
+
+        x, outs = jax.lax.scan(body, x, (blocks, cache["k"], cache["v"]))
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ head)[:, 0]
+        cache = {**cache, "k": outs["k"], "v": outs["v"]}
+        return logits, cache
+
+    # ------------------------------------------------------------- plumbing
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.batch):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                plen = len(req.tokens)
+                toks = jnp.asarray(np.asarray(req.tokens, np.int32)[None])
+                logits, cache1 = self._prefill_fn(plen)(self.params, toks)
+                # copy slot rows into the engine cache
+                for name in ("k", "v"):
+                    self.cache[name] = self.cache[name].at[:, slot].set(
+                        cache1[name][:, 0])
+                first = int(np.argmax(np.asarray(logits[0])))
+                req.out.append(first)
+                self.positions[slot] = plen
+                self.active[slot] = req
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.temperature, axis=-1), np.int32)
+
+    def step(self) -> int:
+        """Admit + one decode step for all active slots.  Returns #active."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        last = np.zeros(self.batch, np.int32)
+        for s, r in enumerate(self.active):
+            if r is not None:
+                last[s] = r.out[-1] if r.out else r.tokens[-1]
+        logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                          self.cache,
+                                          jnp.asarray(self.positions))
+        nxt = self._sample(logits)
+        n_active = 0
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = int(nxt[s])
+            r.out.append(tok)
+            self.positions[s] += 1
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(r.out) >= r.max_new or \
+                    self.positions[s] >= self.s_max - 1:
+                r.done = True
+                self.active[s] = None
+            else:
+                n_active += 1
+        return n_active + len(self.queue)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        while self.step():
+            pass
+        return requests

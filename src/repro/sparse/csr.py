@@ -1,0 +1,119 @@
+"""Local sparse matrices: CSR structure (host/numpy) + ELL values (device).
+
+PETSc stores each rank's diagonal/off-diagonal blocks as sequential CSR
+matrices (paper Fig 3).  On TPU the row-pointer indirection of CSR defeats
+the VPU, so the *numeric* representation used on device is ELLPACK (rows
+padded to the max nnz/row, padding columns pointing at a trailing zero of
+x); the CSR form remains the host-side structural format used for symbolic
+products and assembly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LocalCSR", "csr_from_coo", "spgemm", "csr_transpose"]
+
+
+@dataclasses.dataclass
+class LocalCSR:
+    shape: Tuple[int, int]
+    indptr: np.ndarray    # (m+1,)
+    indices: np.ndarray   # (nnz,)
+    data: np.ndarray      # (nnz,) — numpy master copy; device copies derived
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def toarray(self) -> np.ndarray:
+        m, n = self.shape
+        out = np.zeros((m, n), dtype=self.data.dtype if self.nnz else np.float64)
+        for i in range(m):
+            for jj in range(self.indptr[i], self.indptr[i + 1]):
+                out[i, self.indices[jj]] += self.data[jj]
+        return out
+
+    # ----------------------------------------------------------- ELL view
+    def to_ell(self, dtype=np.float32) -> Tuple[np.ndarray, np.ndarray, int]:
+        """(data, cols, K): rows padded to K = max nnz/row; padding cols point
+        at index n (caller appends a zero to x)."""
+        m, n = self.shape
+        counts = np.diff(self.indptr)
+        K = max(int(counts.max(initial=0)), 1)
+        data = np.zeros((m, K), dtype=dtype)
+        cols = np.full((m, K), n, dtype=np.int32)
+        for i in range(m):
+            s, e = self.indptr[i], self.indptr[i + 1]
+            data[i, : e - s] = self.data[s:e]
+            cols[i, : e - s] = self.indices[s:e]
+        return data, cols, K
+
+    def matvec_np(self, x: np.ndarray) -> np.ndarray:
+        m, _ = self.shape
+        y = np.zeros(m, dtype=np.result_type(self.data.dtype, x.dtype))
+        for i in range(m):
+            s, e = self.indptr[i], self.indptr[i + 1]
+            y[i] = (self.data[s:e] * x[self.indices[s:e]]).sum()
+        return y
+
+
+def csr_from_coo(m: int, n: int, rows: np.ndarray, cols: np.ndarray,
+                 vals: np.ndarray, *, sum_duplicates: bool = True) -> LocalCSR:
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    if sum_duplicates and rows.size:
+        key_same = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
+        groups = np.concatenate([[0], np.cumsum(~key_same)])
+        ng = int(groups[-1]) + 1
+        r2 = np.zeros(ng, dtype=np.int64)
+        c2 = np.zeros(ng, dtype=np.int64)
+        v2 = np.zeros(ng, dtype=vals.dtype)
+        np.add.at(v2, groups, vals)
+        r2[groups] = rows
+        c2[groups] = cols
+        rows, cols, vals = r2, c2, v2
+    indptr = np.zeros(m + 1, dtype=np.int64)
+    np.add.at(indptr[1:], rows, 1)
+    np.cumsum(indptr, out=indptr)
+    return LocalCSR((m, n), indptr, cols, vals)
+
+
+def csr_transpose(a: LocalCSR) -> LocalCSR:
+    m, n = a.shape
+    rows = np.repeat(np.arange(m), np.diff(a.indptr))
+    return csr_from_coo(n, m, a.indices, rows, a.data, sum_duplicates=False)
+
+
+def spgemm(a: LocalCSR, b: LocalCSR) -> LocalCSR:
+    """CSR x CSR (row-merge, host side) — the local product of paper §6.4
+    step 2.  Sizes in tests/benches are modest; numerics are exact."""
+    am, ak = a.shape
+    bk, bn = b.shape
+    if ak != bk:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    rows_out = []
+    cols_out = []
+    vals_out = []
+    for i in range(am):
+        acc: Dict[int, float] = {}
+        for jj in range(a.indptr[i], a.indptr[i + 1]):
+            kcol = a.indices[jj]
+            av = a.data[jj]
+            for kk in range(b.indptr[kcol], b.indptr[kcol + 1]):
+                c = int(b.indices[kk])
+                acc[c] = acc.get(c, 0.0) + av * b.data[kk]
+        for c, v in acc.items():
+            rows_out.append(i)
+            cols_out.append(c)
+            vals_out.append(v)
+    return csr_from_coo(am, bn, np.asarray(rows_out, dtype=np.int64),
+                        np.asarray(cols_out, dtype=np.int64),
+                        np.asarray(vals_out, dtype=np.float64))

@@ -1,0 +1,411 @@
+"""Distributed sparse matrices on star forests (paper §4.1, §6.4).
+
+A ``ParCSR`` is PETSc's MPIAIJ layout (paper Fig 3): rows are block-
+distributed; on each rank the local rows split into the *diagonal* block A
+(columns owned by this rank) and the *off-diagonal* block B whose columns are
+compacted through ``garray`` (the global ids of the nonzero off-diagonal
+columns).  The ghost vector ``lvec`` holds the remote x entries B needs, and
+a star forest — roots: owned x entries, leaves: lvec entries (contiguous!) —
+provides all communication:
+
+  SpMV     y = A x_local (+overlap) then  y += B lvec   after SFBcast
+  SpMV^T   lvec = B^T x ; y = A^T x ; SFReduce(lvec -> y, SUM)
+
+The contiguity of lvec's leaves means the SF's pattern analysis elides the
+leaf-side unpack entirely — the paper's flagship §5.2 optimization.
+
+Also here: SF-driven submatrix extraction (paper §4.1), SpMM (AP, PtAP —
+paper §6.4) with ghost-row fetching through a section-derived dof-SF, and
+COO assembly with fetch-and-add slot allocation (the SF formulation of
+PETSc's MatStash used in step 3 of §6.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import SFOps, StarForest, ragged_offsets
+from ..kernels import ops as kops
+from ..meshdist.section import Section, apply_section
+from .csr import LocalCSR, csr_from_coo, csr_transpose, spgemm
+
+__all__ = ["ParCSR", "assemble_coo"]
+
+
+def _owner_of(offsets: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    return np.searchsorted(offsets, ids, side="right") - 1
+
+
+@dataclasses.dataclass
+class _EllBlock:
+    data: jnp.ndarray   # (m, K)
+    cols: jnp.ndarray   # (m, K) padded -> n (trailing zero of x)
+    n: int
+
+    def apply(self, x: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+        xz = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
+        if use_kernel:
+            return kops.spmv_ell(self.data, self.cols, xz)
+        return jnp.einsum("nk,nk->n", self.data,
+                          jnp.take(xz, self.cols, axis=0))
+
+
+class ParCSR:
+    """Row-distributed sparse matrix with SF-based ghost communication."""
+
+    def __init__(self, nranks: int, row_offsets: np.ndarray,
+                 col_offsets: np.ndarray, diag: List[LocalCSR],
+                 offd: List[LocalCSR], garray: List[np.ndarray],
+                 dtype=np.float32):
+        self.nranks = nranks
+        self.row_offsets = np.asarray(row_offsets, dtype=np.int64)
+        self.col_offsets = np.asarray(col_offsets, dtype=np.int64)
+        self.diag = diag
+        self.offd = offd
+        self.garray = garray
+        self.dtype = dtype
+
+        # ---- the SpMV star forest (paper §4.1): roots = owned x entries,
+        # leaves = lvec entries, contiguous on each rank.
+        sf = StarForest(nranks)
+        for r in range(nranks):
+            ncols_local = int(self.col_offsets[r + 1] - self.col_offsets[r])
+            g = self.garray[r]
+            owner = _owner_of(self.col_offsets, g)
+            remote = np.stack([owner, g - self.col_offsets[owner]], axis=1) \
+                if g.size else np.zeros((0, 2), np.int64)
+            sf.set_graph(r, ncols_local, None, remote,
+                         nleafspace=max(int(g.size), 1))
+        self.sf = sf.setup()
+        self.sfops = SFOps(self.sf)
+        self.lvec_offsets = ragged_offsets(
+            [self.sf.graph(r).nleafspace for r in range(nranks)])
+
+        self._diag_ell = [self._ell(c) for c in self.diag]
+        self._offd_ell = [self._ell(c) for c in self.offd]
+        self._diag_t_ell = [self._ell(csr_transpose(c)) for c in self.diag]
+        self._offd_t_ell = [self._ell(csr_transpose(c)) for c in self.offd]
+
+    def _ell(self, c: LocalCSR) -> _EllBlock:
+        data, cols, _ = c.to_ell(dtype=self.dtype)
+        return _EllBlock(jnp.asarray(data), jnp.asarray(cols), c.shape[1])
+
+    # ------------------------------------------------------------ factory
+    @staticmethod
+    def from_global_coo(nranks: int, m: int, n: int, rows: np.ndarray,
+                        cols: np.ndarray, vals: np.ndarray,
+                        row_offsets: Optional[np.ndarray] = None,
+                        col_offsets: Optional[np.ndarray] = None,
+                        dtype=np.float32) -> "ParCSR":
+        if row_offsets is None:
+            row_offsets = np.linspace(0, m, nranks + 1).astype(np.int64)
+        if col_offsets is None:
+            col_offsets = np.linspace(0, n, nranks + 1).astype(np.int64)
+        diag, offd, garray = [], [], []
+        rows = np.asarray(rows); cols = np.asarray(cols); vals = np.asarray(vals)
+        for r in range(nranks):
+            r0, r1 = row_offsets[r], row_offsets[r + 1]
+            c0, c1 = col_offsets[r], col_offsets[r + 1]
+            sel = (rows >= r0) & (rows < r1)
+            rr, cc, vv = rows[sel] - r0, cols[sel], vals[sel]
+            on = (cc >= c0) & (cc < c1)
+            diag.append(csr_from_coo(int(r1 - r0), int(c1 - c0),
+                                     rr[on], cc[on] - c0, vv[on]))
+            goff = np.unique(cc[~on])
+            cmap = {int(g): i for i, g in enumerate(goff)}
+            offd.append(csr_from_coo(int(r1 - r0), max(goff.size, 1),
+                                     rr[~on],
+                                     np.asarray([cmap[int(c)] for c in cc[~on]],
+                                                dtype=np.int64),
+                                     vv[~on]))
+            garray.append(goff.astype(np.int64))
+        return ParCSR(nranks, row_offsets, col_offsets, diag, offd, garray,
+                      dtype=dtype)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return int(self.row_offsets[-1]), int(self.col_offsets[-1])
+
+    def toarray(self) -> np.ndarray:
+        m, n = self.shape
+        out = np.zeros((m, n))
+        for r in range(self.nranks):
+            r0 = int(self.row_offsets[r]); c0 = int(self.col_offsets[r])
+            out[r0: int(self.row_offsets[r + 1]),
+                c0: int(self.col_offsets[r + 1])] += self.diag[r].toarray()
+            B = self.offd[r].toarray()
+            for j, g in enumerate(self.garray[r]):
+                out[r0: int(self.row_offsets[r + 1]), int(g)] += B[:, j]
+        return out
+
+    # ------------------------------------------------------------- SpMV
+    def spmv(self, x: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+        """y = M x with communication/compute overlap — the paper's listing:
+
+            PetscSFBcastBegin(sf, x, lvec, MPI_REPLACE);
+            y = A*x;                       // local, overlapped
+            PetscSFBcastEnd(sf, x, lvec, MPI_REPLACE);
+            y += B*lvec;
+        """
+        pend = self.sfops.bcast_begin(x, "replace")
+        y_parts = []
+        for r in range(self.nranks):
+            c0, c1 = int(self.col_offsets[r]), int(self.col_offsets[r + 1])
+            y_parts.append(self._diag_ell[r].apply(x[c0:c1], use_kernel))
+        y = jnp.concatenate(y_parts)
+        lvec = pend.end(jnp.zeros((self.sf.nleafspace_total,), x.dtype))
+        y2 = []
+        for r in range(self.nranks):
+            l0, l1 = int(self.lvec_offsets[r]), int(self.lvec_offsets[r + 1])
+            y2.append(self._offd_ell[r].apply(lvec[l0:l1], use_kernel))
+        return y + jnp.concatenate(y2)
+
+    def spmv_transpose(self, x: jnp.ndarray, use_kernel: bool = False
+                       ) -> jnp.ndarray:
+        """y = M^T x:  y = A^T x ; lvec = B^T x ; SFReduce(lvec -> y, SUM)."""
+        y_parts, l_parts = [], []
+        for r in range(self.nranks):
+            r0, r1 = int(self.row_offsets[r]), int(self.row_offsets[r + 1])
+            y_parts.append(self._diag_t_ell[r].apply(x[r0:r1], use_kernel))
+            l_parts.append(self._offd_t_ell[r].apply(x[r0:r1], use_kernel))
+        y = jnp.concatenate(y_parts)
+        lvec_parts = []
+        for r in range(self.nranks):
+            nls = self.sf.graph(r).nleafspace
+            lp = l_parts[r]
+            if lp.shape[0] < nls:   # offd block may be the 1-col placeholder
+                lp = jnp.zeros((nls,), y.dtype).at[: lp.shape[0]].set(lp)
+            lvec_parts.append(lp[:nls])
+        lvec = jnp.concatenate(lvec_parts)
+        return self.sfops.reduce(lvec, y, "sum")
+
+    # ------------------------------------------------- ghost-row fetching
+    def _row_sf(self, wanted: List[np.ndarray],
+                row_offsets: Optional[np.ndarray] = None) -> StarForest:
+        """SF whose roots are matrix rows and leaves the requested rows."""
+        ro = self.row_offsets if row_offsets is None else row_offsets
+        sf = StarForest(self.nranks)
+        for r in range(self.nranks):
+            w = np.asarray(wanted[r], dtype=np.int64)
+            owner = _owner_of(ro, w)
+            remote = np.stack([owner, w - ro[owner]], axis=1) if w.size \
+                else np.zeros((0, 2), np.int64)
+            nroots = int(ro[r + 1] - ro[r])
+            sf.set_graph(r, nroots, None, remote, nleafspace=max(w.size, 1))
+        return sf.setup()
+
+    def fetch_rows(self, wanted: List[np.ndarray]
+                   ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Fetch full rows (global columns) of self for each rank's ``wanted``
+        global row list.  Rows are communicated through a dof-SF derived by
+        applying the nnz-per-row Section to the row SF (paper §4.2 style).
+        Returns per rank (indptr, cols, vals) of the fetched rows."""
+        R = self.nranks
+        row_sf = self._row_sf(wanted)
+        # per-rank merged local rows in global column space
+        merged: List[LocalCSR] = []
+        for r in range(R):
+            A, B, g = self.diag[r], self.offd[r], self.garray[r]
+            c0 = int(self.col_offsets[r])
+            m = A.shape[0]
+            rows = np.concatenate([np.repeat(np.arange(m), np.diff(A.indptr)),
+                                   np.repeat(np.arange(m), np.diff(B.indptr))])
+            cols = np.concatenate([A.indices + c0,
+                                   g[B.indices] if B.nnz else np.zeros(0, np.int64)])
+            vals = np.concatenate([A.data, B.data])
+            merged.append(csr_from_coo(m, self.shape[1], rows, cols, vals))
+        sections = [Section.from_sizes(np.diff(merged[r].indptr)) for r in range(R)]
+        dof_sf = apply_section(row_sf, sections)
+        dops = SFOps(dof_sf)
+        root_cols = np.concatenate([m.indices for m in merged]) \
+            if sum(m.nnz for m in merged) else np.zeros(0, np.int64)
+        root_vals = np.concatenate([m.data for m in merged]) \
+            if sum(m.nnz for m in merged) else np.zeros(0, np.float64)
+        nls = dof_sf.nleafspace_total
+        leaf_cols = np.asarray(dops.bcast(root_cols, np.zeros(nls, np.int64),
+                                          "replace"))
+        leaf_vals = np.asarray(dops.bcast(
+            jnp.asarray(root_vals.astype(np.float32)),
+            jnp.zeros(nls, jnp.float32), "replace"))
+        # also bcast row sizes over the row SF to rebuild indptrs
+        pops = SFOps(row_sf)
+        root_sizes = np.concatenate([s.sizes for s in sections])
+        lsizes = np.asarray(pops.bcast(root_sizes,
+                                       np.zeros(row_sf.nleafspace_total, np.int64),
+                                       "replace"))
+        out = []
+        lo = row_sf.leaf_offsets()
+        dlo = dof_sf.leaf_offsets()
+        for r in range(R):
+            sz = lsizes[lo[r]: lo[r] + len(np.asarray(wanted[r]))]
+            indptr = np.zeros(sz.shape[0] + 1, dtype=np.int64)
+            np.cumsum(sz, out=indptr[1:])
+            c = leaf_cols[dlo[r]: dlo[r + 1]][: indptr[-1]]
+            v = leaf_vals[dlo[r]: dlo[r + 1]][: indptr[-1]]
+            out.append((indptr, c, v))
+        return out
+
+    # ------------------------------------------------------------- SpMM
+    def spmm(self, P: "ParCSR") -> "ParCSR":
+        """AP = self @ P (paper §6.4): fetch ghost rows of P named by garray,
+        then purely local products — step 3 assembly is row-local for AP."""
+        R = self.nranks
+        fetched = P.fetch_rows(self.garray)   # step 1: ghost rows of P
+        rows_l, cols_l, vals_l = [], [], []
+        for r in range(R):
+            c0 = int(self.col_offsets[r])
+            # local block of P (rows owned by r), global columns
+            indptr, cols, vals = fetched[r]
+            Pf = csr_from_coo(
+                len(self.garray[r]), P.shape[1],
+                np.repeat(np.arange(len(self.garray[r])), np.diff(indptr)),
+                cols, vals)
+            m = self.diag[r].shape[0]
+            Pl_ip, Pl_c, Pl_v = self._local_rows_global_cols(P, r)
+            Pl = csr_from_coo(self.diag[r].shape[1], P.shape[1],
+                              np.repeat(np.arange(self.diag[r].shape[1]),
+                                        np.diff(Pl_ip)), Pl_c, Pl_v)
+            APr = spgemm(self.diag[r], Pl)
+            if self.offd[r].nnz:
+                AP2 = spgemm(self.offd[r], Pf)
+                APr = _csr_add(APr, AP2)
+            r0 = int(self.row_offsets[r])
+            rows_l.append(np.repeat(np.arange(m), np.diff(APr.indptr)) + r0)
+            cols_l.append(APr.indices)
+            vals_l.append(APr.data)
+        rows = np.concatenate(rows_l); cols = np.concatenate(cols_l)
+        vals = np.concatenate(vals_l)
+        return ParCSR.from_global_coo(R, self.shape[0], P.shape[1], rows, cols,
+                                      vals, row_offsets=self.row_offsets,
+                                      col_offsets=P.col_offsets,
+                                      dtype=self.dtype)
+
+    def _local_rows_global_cols(self, M: "ParCSR", r: int):
+        A, B, g = M.diag[r], M.offd[r], M.garray[r]
+        c0 = int(M.col_offsets[r])
+        m = A.shape[0]
+        rows = np.concatenate([np.repeat(np.arange(m), np.diff(A.indptr)),
+                               np.repeat(np.arange(m), np.diff(B.indptr))])
+        cols = np.concatenate([A.indices + c0,
+                               g[B.indices] if B.nnz else np.zeros(0, np.int64)])
+        vals = np.concatenate([A.data, B.data])
+        csr = csr_from_coo(m, M.shape[1], rows, cols, vals)
+        return csr.indptr, csr.indices, csr.data
+
+    def ptap(self, P: "ParCSR") -> "ParCSR":
+        """Galerkin product P^T (self) P (paper §6.4, Fig 12 right).
+
+        Local P_r^T @ (AP)_r yields contributions to rows owned by *other*
+        ranks (P's columns); they are routed with the COO assembly SF below
+        — fetch-and-add slot allocation + reduce, PETSc's MatStash on SF."""
+        AP = self.spmm(P)
+        R = self.nranks
+        trips: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        for r in range(R):
+            ip, c, v = self._local_rows_global_cols(AP, r)
+            APl = csr_from_coo(AP.diag[r].shape[0], AP.shape[1],
+                               np.repeat(np.arange(AP.diag[r].shape[0]),
+                                         np.diff(ip)), c, v)
+            ipP, cP, vP = self._local_rows_global_cols(P, r)
+            Pl = csr_from_coo(P.diag[r].shape[0], P.shape[1],
+                              np.repeat(np.arange(P.diag[r].shape[0]),
+                                        np.diff(ipP)), cP, vP)
+            Pt = csr_transpose(Pl)   # (P global cols) x (local rows)
+            prod = spgemm(Pt, APl)   # rows: global P cols; cols: global
+            rows = np.repeat(np.arange(prod.shape[0]), np.diff(prod.indptr))
+            trips.append((rows, prod.indices, prod.data))
+        return assemble_coo(R, P.shape[1], AP.shape[1], trips,
+                            row_offsets=P.col_offsets,
+                            col_offsets=P.col_offsets
+                            if P.shape[1] == AP.shape[1] else None,
+                            dtype=self.dtype)
+
+
+def _csr_add(a: LocalCSR, b: LocalCSR) -> LocalCSR:
+    m, n = a.shape
+    rows = np.concatenate([np.repeat(np.arange(m), np.diff(a.indptr)),
+                           np.repeat(np.arange(m), np.diff(b.indptr))])
+    cols = np.concatenate([a.indices, b.indices])
+    vals = np.concatenate([a.data, b.data])
+    return csr_from_coo(m, n, rows, cols, vals)
+
+
+def assemble_coo(nranks: int, m: int, n: int,
+                 triplets: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+                 row_offsets: Optional[np.ndarray] = None,
+                 col_offsets: Optional[np.ndarray] = None,
+                 dtype=np.float32) -> ParCSR:
+    """Distributed COO assembly via star forests (paper §6.4 step 3).
+
+    1. A *counting SF* (one counter root per rank) + FetchAndOp(SUM) assigns
+       every triplet a staging slot on its owner rank — the paper's
+       fetch-and-add offset allocation.
+    2. A *staging SF* (roots = allocated slots) routes (row, col, val) with
+       three REPLACE reduces.
+    3. Owners build their local CSR from the staged COO.
+    """
+    if row_offsets is None:
+        row_offsets = np.linspace(0, m, nranks + 1).astype(np.int64)
+    row_offsets = np.asarray(row_offsets, dtype=np.int64)
+
+    owners = [np.searchsorted(row_offsets, np.asarray(t[0]), side="right") - 1
+              for t in triplets]
+    # --- 1) counting SF: rank p owns one counter (root); each triplet is a
+    # leaf connected to its owner's counter.
+    csf = StarForest(nranks)
+    for q in range(nranks):
+        t = owners[q]
+        remote = np.stack([t, np.zeros_like(t)], axis=1) if t.size \
+            else np.zeros((0, 2), np.int64)
+        csf.set_graph(q, 1, None, remote, nleafspace=max(t.size, 1))
+    csf.setup()
+    cops = SFOps(csf)
+    root0 = jnp.zeros((nranks,), jnp.int32)
+    ones = jnp.ones((csf.nleafspace_total,), jnp.int32)
+    totals, slots = cops.fetch_and_op(root0, ones, "sum")
+    totals = np.asarray(totals)
+    slots = np.asarray(slots)
+    lo = csf.leaf_offsets()
+
+    # --- 2) staging SF: roots = totals[r] slots on rank r
+    ssf = StarForest(nranks)
+    for q in range(nranks):
+        t = owners[q]
+        s = slots[lo[q]: lo[q] + t.size]
+        remote = np.stack([t, s], axis=1) if t.size else np.zeros((0, 2), np.int64)
+        ssf.set_graph(q, int(totals[q]), None, remote,
+                      nleafspace=max(t.size, 1))
+    ssf.setup()
+    sops = SFOps(ssf)
+    nstage = ssf.nroots_total
+
+    def route(vals, dt):
+        leaf = np.zeros(ssf.nleafspace_total, dtype=dt)
+        for q in range(nranks):
+            v = np.asarray(vals[q], dtype=dt)
+            leaf[lo[q]: lo[q] + v.size] = v
+        return np.asarray(sops.reduce(jnp.asarray(leaf),
+                                      jnp.zeros(nstage, dt), "replace"))
+
+    rows_g = route([t[0] for t in triplets], np.int64)
+    cols_g = route([t[1] for t in triplets], np.int64)
+    vals_g = route([t[2] for t in triplets], np.float64)
+
+    # --- 3) local CSR per rank from staged COO
+    so = ragged_offsets(totals.tolist())
+    rows_all, cols_all, vals_all = [], [], []
+    for r in range(nranks):
+        rows_all.append(rows_g[so[r]: so[r + 1]])
+        cols_all.append(cols_g[so[r]: so[r + 1]])
+        vals_all.append(vals_g[so[r]: so[r + 1]])
+    rows = np.concatenate(rows_all) if rows_all else np.zeros(0, np.int64)
+    cols = np.concatenate(cols_all) if cols_all else np.zeros(0, np.int64)
+    vals = np.concatenate(vals_all) if vals_all else np.zeros(0, np.float64)
+    return ParCSR.from_global_coo(nranks, m, n, rows, cols, vals,
+                                  row_offsets=row_offsets,
+                                  col_offsets=col_offsets, dtype=dtype)

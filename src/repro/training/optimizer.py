@@ -1,0 +1,156 @@
+"""AdamW with optional 8-bit quantized moments (distributed-optimization
+trick; see DESIGN.md §4.2).
+
+The optimizer state inherits the parameter sharding (ZeRO-3: every moment
+shard lives with its weight shard), so state memory per device is
+``state_bytes_per_param * N / n_devices``.  The ``int8`` moment mode stores
+m and v as int8 with one fp32 scale per trailing-axis row (block-wise absmax
+quantization a la 8-bit Adam) — 2 bytes/param of optimizer state instead of
+8, which is what lets the kimi-k2 1T config fit 512 chips of v5e
+(EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"   # float32 | bfloat16 | int8
+    # bf16 all-reduce for grads is controlled by the train loop (grad_dtype)
+
+
+def lr_at(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(np.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+# ----------------------------------------------------------------- int8 pack
+def _q8(x: jnp.ndarray) -> Dict:
+    """Blockwise absmax int8 quantization along the trailing axis."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def _dq8(p: Dict) -> jnp.ndarray:
+    return p["q"].astype(jnp.float32) * p["s"]
+
+
+def _moment_zero(x: jnp.ndarray, kind: str):
+    if kind == "int8":
+        return {"q": jnp.zeros(x.shape, jnp.int8),
+                "s": jnp.full(x.shape[:-1] + (1,), 1e-12, jnp.float32)}
+    dt = jnp.bfloat16 if kind == "bfloat16" else jnp.float32
+    return jnp.zeros(x.shape, dt)
+
+
+def _moment_read(m, kind: str) -> jnp.ndarray:
+    if kind == "int8":
+        return _dq8(m)
+    return m.astype(jnp.float32)
+
+
+def _moment_write(x: jnp.ndarray, kind: str):
+    if kind == "int8":
+        return _q8(x)
+    dt = jnp.bfloat16 if kind == "bfloat16" else jnp.float32
+    return x.astype(dt)
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict:
+    kind = cfg.moments_dtype
+    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+    return {
+        "m": jax.tree.map(lambda x: _moment_zero(x, kind), params),
+        "v": jax.tree.map(lambda x: _moment_zero(x, kind), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, opt_state: Dict, cfg: OptConfig
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """One AdamW step.  Returns (params', opt_state', metrics)."""
+    kind = cfg.moments_dtype
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.asarray(1.0)
+
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_q = lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+    def upd_flat(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _moment_read(m, kind)
+        vf = _moment_read(v, kind)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, _moment_write(mf, kind), _moment_write(vf, kind)
+
+    def upd(p, g, m, v):
+        # layer-stacked tensors update under lax.map over the leading axis:
+        # the fp32 working set is one layer slice instead of the full stack
+        # (a 1T-param model otherwise materializes ~5 GiB fp32 temporaries
+        # PER WEIGHT STACK during the update — EXPERIMENTS.md §Perf).
+        # The optimization_barrier pins the slice's bf16/int8 narrowing
+        # INSIDE the loop body; without it XLA sinks the converts out of the
+        # loop and carries full fp32 stacks instead.
+        if p.ndim >= 3 and p.shape[0] > 1:
+            return jax.lax.map(
+                lambda a: jax.lax.optimization_barrier(upd_flat(*a)),
+                (p, g, m, v))
+        return upd_flat(p, g, m, v)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

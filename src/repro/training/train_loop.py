@@ -1,0 +1,155 @@
+"""Training step factory: loss, microbatched gradient accumulation, and the
+distributed step wiring (GSPMD sharding + hierarchical gradient reduction).
+
+Scale features (DESIGN.md §4.2):
+  * microbatching — ``lax.scan`` over microbatches accumulating grads in
+    ``grad_dtype`` (bf16 accumulation halves the grad buffer for the 1T MoE);
+  * ZeRO/FSDP — grads/optimizer states inherit param specs, so the update is
+    fully sharded;
+  * compute/comm overlap — gradient reduction is expressed per-layer-stack
+    inside the backward scan (XLA's latency-hiding scheduler overlaps the
+    reduce-scatters with the remaining backward compute);
+  * z-loss + MoE aux loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+__all__ = ["TrainConfig", "make_loss_fn", "make_train_step", "TrainState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    grad_dtype: str = "float32"      # float32 | bfloat16
+    z_loss: float = 1e-4
+    aux_loss: float = 1e-2
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_coef: float = 0.0) -> jnp.ndarray:
+    """Token-mean CE with fp32 accumulation; labels < 0 are masked.
+
+    Written to stay *vocab-shardable*: the gold logit comes from a masked
+    reduction over the vocab axis (lowered by GSPMD to a local reduce +
+    psum), never a ``take_along_axis`` gather — a gather over the
+    model-sharded axis replicates the full fp32 logits per device
+    (~40 GiB/device for a 150k vocab at 1M tokens; caught by the dry-run
+    memory analysis, see EXPERIMENTS.md §Perf)."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    lse_rel = jnp.log(sumexp)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold_rel = jnp.sum(jnp.where(iota == labels[..., None], shifted, 0.0),
+                       axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = (lse_rel - gold_rel) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(ce) / denom
+    if z_coef:
+        full_lse = lse_rel + m[..., 0].astype(jnp.float32)
+        loss = loss + z_coef * jnp.sum(jnp.square(full_lse) * mask) / denom
+    return loss
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    def loss_fn(params, batch):
+        kwargs = {}
+        if "embeds" in batch:
+            kwargs["embeds"] = batch["embeds"]
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        if "enc_embeds" in batch:
+            kwargs["enc_embeds"] = batch["enc_embeds"]
+        logits, aux = T.forward(params, cfg, **kwargs)
+        loss = cross_entropy(logits, batch["labels"], tcfg.z_loss)
+        return loss + tcfg.aux_loss * aux, {"ce": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptConfig,
+                    tcfg: TrainConfig = TrainConfig(),
+                    param_shardings=None, batch_shardings=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    ``batch`` arrays have a leading global-batch axis; with
+    ``tcfg.microbatches = G > 1`` the step scans G microbatches accumulating
+    gradients before one optimizer update (gradient accumulation).
+
+    ``param_shardings`` (a NamedSharding tree matching params) pins the
+    gradient-accumulator carry to the ZeRO layout: without the constraint,
+    sharding propagation through the scan carry can leave grads replicated
+    — ~N*4 bytes *per device* — which is exactly the failure the dry-run
+    memory analysis catches (EXPERIMENTS.md §Perf, iteration 1)."""
+    loss_fn = make_loss_fn(cfg, tcfg)
+    gdt = jnp.dtype(tcfg.grad_dtype)
+
+    def constrain_g(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            param_shardings)
+
+    def train_step(params, opt_state, batch):
+        G = tcfg.microbatches
+        if G == 1:
+            (loss, met), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            grads = constrain_g(grads)
+        else:
+            def slice_mb(x, sh=None):
+                B = x.shape[0]
+                out = x.reshape((G, B // G) + x.shape[1:])
+                if sh is not None:
+                    out = jax.lax.with_sharding_constraint(out, sh)
+                return out
+            if batch_shardings is not None:
+                mbs = jax.tree.map(slice_mb, batch, batch_shardings)
+            else:
+                mbs = jax.tree.map(slice_mb, batch)
+
+            def body(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(gdt),
+                                 acc[0], g)
+                return (constrain_g(g), acc[1] + l), None
+
+            zero = constrain_g(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params))
+            (gsum, lsum), _ = jax.lax.scan(body, (zero, jnp.zeros((), jnp.float32)),
+                                           mbs)
+            grads = constrain_g(
+                jax.tree.map(lambda g: (g / G).astype(gdt), gsum))
+            loss = lsum / G
+            met = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        params, opt_state, omet = adamw_update(params, grads, opt_state, ocfg)
+        metrics = {"loss": loss, **met, **omet}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Dict
+    opt_state: Dict
+    step: int = 0
+
+    @staticmethod
+    def create(key, cfg: ModelConfig, ocfg: OptConfig) -> "TrainState":
+        params = T.init_params(key, cfg)
+        return TrainState(params, init_opt_state(params, ocfg), 0)

@@ -1,0 +1,41 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests run single-device;
+multi-device shard_map tests spawn subprocesses (tests/util.py)."""
+
+import numpy as np
+import pytest
+
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_star_forest(nranks=4, max_roots=7, max_leaves=9, holes=True,
+                       seed=0):
+    """Random SF: isolated leaves, leafless roots, self-edges, duplicate
+    roots — the full grammar of paper §3.1 graphs."""
+    from repro.core import StarForest
+    r = np.random.default_rng(seed)
+    sf = StarForest(nranks)
+    nroots = [int(r.integers(0, max_roots + 1)) for _ in range(nranks)]
+    if sum(nroots) == 0:
+        nroots[0] = 1
+    for q in range(nranks):
+        nl = int(r.integers(0, max_leaves + 1))
+        space = nl + (int(r.integers(0, 4)) if holes else 0)
+        pos = r.choice(space, size=nl, replace=False) if nl else \
+            np.zeros(0, int)
+        remote = []
+        for _ in range(nl):
+            p = int(r.integers(0, nranks))
+            while nroots[p] == 0:
+                p = int(r.integers(0, nranks))
+            remote.append((p, int(r.integers(0, nroots[p]))))
+        sf.set_graph(q, nroots[q], pos,
+                     np.asarray(remote).reshape(-1, 2),
+                     nleafspace=max(space, 1))
+    return sf.setup()

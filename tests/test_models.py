@@ -1,0 +1,114 @@
+"""Per-arch smoke tests (reduced same-family configs) + model invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_forward_one_step(arch, key):
+    """Reduced config: one forward + one prefill + one decode on CPU;
+    asserts shapes and no NaNs (the brief's per-arch smoke test)."""
+    cfg = get_config(arch).smoke_config().scaled(dtype="float32",
+                                                 remat="none")
+    params = T.init_params(key, cfg)
+    B, S = 2, 16
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["embeds"] = jax.random.normal(key, (B, S, cfg.d_model)) * 0.02
+    else:
+        kwargs["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if cfg.family == "audio":
+        kwargs["enc_embeds"] = jax.random.normal(key, (B, 24, cfg.d_model)) \
+            * 0.02
+    logits, aux = T.forward(params, cfg, **kwargs)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits)))
+    lg, cache = T.prefill(params, cfg, s_max=S + 4, **kwargs)
+    assert lg.shape == (B, cfg.vocab)
+    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+    lg2, cache = T.decode_step(params, cfg, nxt, cache)
+    assert lg2.shape == (B, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(lg2)))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_train_step(arch, key):
+    """One reduced train step on CPU; loss finite, params update."""
+    from repro.training.optimizer import OptConfig
+    from repro.training.train_loop import TrainConfig, TrainState, \
+        make_train_step
+    from repro.training.data import make_batch
+    cfg = get_config(arch).smoke_config().scaled(dtype="float32",
+                                                 remat="block")
+    ocfg = OptConfig(lr=1e-3, warmup_steps=2, decay_steps=10)
+    st = TrainState.create(key, cfg, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, TrainConfig()))
+    b = {k: jnp.asarray(v) for k, v in make_batch(cfg, 4, 16).items()}
+    p1, o1, m = step(st.params, st.opt_state, b)
+    assert np.isfinite(float(m["loss"]))
+    d = sum(float(jnp.sum(jnp.abs(a - b_)))
+            for a, b_ in zip(jax.tree.leaves(st.params), jax.tree.leaves(p1)))
+    assert d > 0
+
+
+def test_decode_matches_forward(key):
+    cfg = get_config("qwen3-4b").smoke_config().scaled(dtype="float32",
+                                                       remat="none")
+    params = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (1, 9), 0, cfg.vocab)
+    full, _ = T.forward(params, cfg, tokens=toks)
+    lg, cache = T.prefill(params, cfg, tokens=toks[:, :8], s_max=16)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 7]),
+                               rtol=2e-4, atol=2e-4)
+    lg2, _ = T.decode_step(params, cfg, toks[:, 8], cache)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(full[:, 8]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_restricts_context(key):
+    """With window w, logits at position t must not depend on tokens < t-w."""
+    cfg = get_config("hymba-1.5b").smoke_config().scaled(
+        dtype="float32", remat="none", ssm_heads=0, block_kind="transformer",
+        attn_window=4, global_layer_every=0)
+    params = T.init_params(key, cfg)
+    t1 = jax.random.randint(key, (1, 12), 0, cfg.vocab)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 1) % cfg.vocab)   # perturb distant past
+    l1, _ = T.forward(params, cfg, tokens=t1)
+    l2, _ = T.forward(params, cfg, tokens=t2)
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_param_count_formula_close():
+    """ModelConfig.param_count() tracks actual init within 5% (dense)."""
+    for arch in ["qwen3-4b", "starcoder2-3b"]:
+        cfg = get_config(arch).smoke_config().scaled(dtype="float32")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(est - actual) / actual < 0.05, (arch, est, actual)
+
+
+def test_moe_balanced_dispatch_no_drops(key):
+    """With uniform router and enough capacity, combine(dispatch(x)) touches
+    every token (no silent drops)."""
+    from repro.models.moe import moe_layer
+    cfg = get_config("phi3.5-moe-42b-a6.6b").smoke_config().scaled(
+        dtype="float32", moe_capacity=4.0)
+    from repro.models.moe import init_moe
+    p = jax.tree.map(lambda a: a[0], init_moe(key, cfg, 1))
+    x = jax.random.normal(key, (2, 16, cfg.d_model)) * 0.1
+    y, aux = moe_layer(x, p, cfg)
+    assert y.shape == x.shape
+    assert float(jnp.mean(jnp.abs(y))) > 0
+    assert np.isfinite(float(aux))

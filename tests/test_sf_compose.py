@@ -1,0 +1,101 @@
+"""Composition / embedding / multi-SF semantics (paper §3.3)."""
+
+import numpy as np
+import pytest
+
+from conftest import random_star_forest
+from repro.core import (SFOps, StarForest, compose, compose_inverse,
+                        embed_leaves, embed_roots, identity_sf, make_multi_sf,
+                        simulate)
+
+
+def test_compose_with_identity_is_identity():
+    A = random_star_forest(seed=7)
+    I = identity_sf([A.graph(r).nleafspace for r in range(A.nranks)])
+    AI = compose(A, I)
+    np.testing.assert_array_equal(
+        np.sort(A.edges_global(), axis=0), np.sort(AI.edges_global(), axis=0))
+
+
+def test_compose_semantics_via_bcast():
+    # bcast over compose(A,B) == bcast over A restricted to B's bridges
+    A = random_star_forest(seed=3)
+    # B: roots = A's leaf space, leaves connect randomly
+    r = np.random.default_rng(5)
+    B = StarForest(A.nranks)
+    for q in range(A.nranks):
+        nl = int(r.integers(1, 6))
+        remote = []
+        for _ in range(nl):
+            m = int(r.integers(0, A.nranks))
+            space = A.graph(m).nleafspace
+            remote.append((m, int(r.integers(0, space))))
+        B.set_graph(q, A.graph(q).nleafspace, None,
+                    np.asarray(remote), nleafspace=nl)
+    B.setup()
+    AB = compose(A, B)
+    root = r.standard_normal(A.nroots_total).astype(np.float32)
+    # two-hop: bcast over A then over B
+    mid = simulate.bcast_ref(A, root, np.full(A.nleafspace_total, np.nan,
+                                              np.float32), "replace")
+    two_hop = simulate.bcast_ref(B, mid, np.full(B.nleafspace_total, np.nan,
+                                                 np.float32), "replace")
+    one_hop = simulate.bcast_ref(AB, root,
+                                 np.full(AB.nleafspace_total, np.nan,
+                                         np.float32), "replace")
+    # wherever AB has an edge, one hop == two hops
+    gl = AB.edges_global()[:, 1]
+    np.testing.assert_allclose(one_hop[gl], two_hop[gl])
+
+
+def test_compose_inverse_rejects_high_degree():
+    A = random_star_forest(seed=1)
+    with pytest.raises(ValueError):
+        compose_inverse(A, A)  # A generally has roots with degree > 1
+
+
+def test_embed_roots_filters_edges():
+    sf = random_star_forest(seed=11)
+    sel = [np.arange(0, sf.graph(r).nroots, 2) for r in range(sf.nranks)]
+    esf = embed_roots(sf, sel)
+    ro = sf.root_offsets()
+    keep = set()
+    for r in range(sf.nranks):
+        for o in sel[r]:
+            keep.add(int(ro[r] + o))
+    e_all = {tuple(e) for e in sf.edges_global().tolist()}
+    e_emb = {tuple(e) for e in esf.edges_global().tolist()}
+    assert e_emb == {e for e in e_all if e[0] in keep}
+    # indices NOT remapped: same root/leaf spaces
+    assert esf.nroots_total == sf.nroots_total
+    assert esf.nleafspace_total == sf.nleafspace_total
+
+
+def test_embed_leaves_filters_edges():
+    sf = random_star_forest(seed=13)
+    sel = [np.arange(0, sf.graph(r).nleafspace, 2)
+           for r in range(sf.nranks)]
+    esf = embed_leaves(sf, sel)
+    lo = sf.leaf_offsets()
+    keep = set()
+    for r in range(sf.nranks):
+        for o in sel[r]:
+            keep.add(int(lo[r] + o))
+    e_all = {tuple(e) for e in sf.edges_global().tolist()}
+    e_emb = {tuple(e) for e in esf.edges_global().tolist()}
+    assert e_emb == {e for e in e_all if e[1] in keep}
+
+
+def test_multi_sf_layout_matches_oracle():
+    sf = random_star_forest(seed=17)
+    multi = make_multi_sf(sf)
+    assert multi.nroots_total == sf.nedges_total
+    # every multi-root has degree exactly 1 (or 0 is impossible by constr.)
+    for r in range(multi.nranks):
+        assert (multi.degrees(r) == 1).all()
+    # gather through multi-SF == gather_ref
+    ops = SFOps(sf)
+    r = np.random.default_rng(0)
+    leaf = r.standard_normal((sf.nleafspace_total, 2)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ops.gather(leaf)),
+                               simulate.gather_ref(sf, leaf))

@@ -1,0 +1,90 @@
+"""Distributed SF execution: shard_map lowering vs oracle.
+
+Runs in a SUBPROCESS with --xla_force_host_platform_device_count=8 so the
+main pytest process keeps its single-device view (per the brief)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+TESTS = os.path.abspath(os.path.dirname(__file__))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {tests!r})
+    import numpy as np, jax, jax.numpy as jnp
+    from conftest import random_star_forest
+    from repro.core import DistSF, simulate
+    from repro.core import patterns as pat
+
+    mesh = jax.make_mesh((8,), ("sf",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    for seed in range(5):
+        sf = random_star_forest(nranks=8, seed=seed)
+        d = DistSF(sf, axis_name="sf")
+        roots = [rng.standard_normal((sf.graph(r).nroots, 2)).astype(np.float32)
+                 for r in range(8)]
+        leaves = [rng.standard_normal((sf.graph(r).nleafspace, 2)).astype(np.float32)
+                  for r in range(8)]
+        g_root = np.concatenate(roots) if sf.nroots_total else np.zeros((0,2),np.float32)
+        g_leaf = np.concatenate(leaves) if sf.nleafspace_total else np.zeros((0,2),np.float32)
+        rs, ls = d.pad_root_stack(roots), d.pad_leaf_stack(leaves)
+        for op in ["replace", "sum", "max", "min"]:
+            out = d.make_bcast_fn(mesh, op=op)(jnp.asarray(rs), jnp.asarray(ls))
+            got = np.concatenate(d.unpad_leaf_stack(out))
+            want = simulate.bcast_ref(sf, g_root, g_leaf, op)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"bcast {{op}} seed {{seed}}")
+            out = d.make_reduce_fn(mesh, op=op)(jnp.asarray(ls), jnp.asarray(rs))
+            got = np.concatenate(d.unpad_root_stack(out))
+            want = simulate.reduce_ref(sf, g_leaf, g_root, op)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"reduce {{op}} seed {{seed}}")
+        ri = [rng.integers(0, 50, (sf.graph(r).nroots,)).astype(np.int32) for r in range(8)]
+        li = [rng.integers(0, 50, (sf.graph(r).nleafspace,)).astype(np.int32) for r in range(8)]
+        ro, lu = d.make_fetch_fn(mesh)(jnp.asarray(d.pad_root_stack(ri)),
+                                       jnp.asarray(d.pad_leaf_stack(li)))
+        wr, wl = simulate.fetch_and_op_ref(
+            sf, np.concatenate(ri) if sf.nroots_total else np.zeros(0, np.int32),
+            np.concatenate(li) if sf.nleafspace_total else np.zeros(0, np.int32), "sum")
+        np.testing.assert_array_equal(np.concatenate(d.unpad_root_stack(ro)), wr)
+        np.testing.assert_array_equal(np.concatenate(d.unpad_leaf_stack(lu)), wl)
+    print("DIST-OK")
+
+    # pattern lowerings hit the specialized collectives
+    from repro.core import StarForest
+    R = 8
+    sf = StarForest(R)
+    nroots = [2] * R
+    ro = np.concatenate([[0], np.cumsum(nroots)])
+    total = int(ro[-1])
+    for q in range(R):
+        rr = np.searchsorted(ro, np.arange(total), side="right") - 1
+        off = np.arange(total) - ro[rr]
+        sf.set_graph(q, nroots[q], None, np.stack([rr, off], 1), nleafspace=total)
+    sf.setup()
+    d = DistSF(sf)
+    assert d.lowering == pat.ALLGATHER
+    fn = d.make_bcast_fn(mesh, op="replace")
+    txt = fn.lower(jax.ShapeDtypeStruct((R, d.plan.root_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((R, d.plan.leaf_pad), jnp.float32)).compile().as_text()
+    assert "all-gather" in txt and "all-to-all" not in txt
+    print("PATTERN-OK")
+""").format(src=REPO_SRC, tests=TESTS)
+
+
+@pytest.mark.slow
+def test_distributed_sf_subprocess():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DIST-OK" in r.stdout
+    assert "PATTERN-OK" in r.stdout

@@ -1,0 +1,117 @@
+"""Hypothesis property tests on star-forest invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SFOps, StarForest, make_multi_sf, simulate
+from repro.core import patterns as pat
+
+
+@st.composite
+def star_forests(draw, max_ranks=4, max_roots=6, max_leaves=8):
+    R = draw(st.integers(1, max_ranks))
+    nroots = [draw(st.integers(0, max_roots)) for _ in range(R)]
+    if sum(nroots) == 0:
+        nroots[0] = 1
+    sf = StarForest(R)
+    for q in range(R):
+        nl = draw(st.integers(0, max_leaves))
+        space = nl + draw(st.integers(0, 3))
+        pos = draw(st.permutations(list(range(max(space, 1)))))[:nl]
+        remote = []
+        for _ in range(nl):
+            p = draw(st.sampled_from(
+                [i for i in range(R) if nroots[i] > 0]))
+            remote.append((p, draw(st.integers(0, nroots[p] - 1))))
+        sf.set_graph(q, nroots[q], pos, np.asarray(remote).reshape(-1, 2),
+                     nleafspace=max(space, 1))
+    return sf.setup()
+
+
+@settings(max_examples=40, deadline=None)
+@given(star_forests(), st.integers(0, 2 ** 31 - 1))
+def test_bcast_reduce_duality(sf, seed):
+    """<Bcast(r), l> == <r, Reduce(l)> for replace-free linear ops: pushing
+    roots to leaves then dotting with leaf weights equals reducing leaf
+    weights to roots then dotting with root values (adjointness of the SF
+    operator — the linear-algebra heart of SpMV/SpMVT)."""
+    rng = np.random.default_rng(seed)
+    ops = SFOps(sf)
+    r = rng.standard_normal(sf.nroots_total).astype(np.float64)
+    l = rng.standard_normal(sf.nleafspace_total).astype(np.float64)
+    Br = np.asarray(ops.bcast(jnp.asarray(r, jnp.float32),
+                              jnp.zeros(sf.nleafspace_total, jnp.float32),
+                              "sum"))
+    Rl = np.asarray(ops.reduce(jnp.asarray(l, jnp.float32),
+                               jnp.zeros(sf.nroots_total, jnp.float32),
+                               "sum"))
+    np.testing.assert_allclose(np.dot(Br, l), np.dot(r, Rl), rtol=1e-3,
+                               atol=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(star_forests(), st.integers(0, 2 ** 31 - 1))
+def test_fetch_and_op_prefix_property(sf, seed):
+    """leafupdate values within each root are exclusive prefix sums in the
+    deterministic edge order; root final = initial + total."""
+    rng = np.random.default_rng(seed)
+    ri = rng.integers(0, 50, sf.nroots_total).astype(np.int32)
+    li = rng.integers(0, 50, sf.nleafspace_total).astype(np.int32)
+    ro, lu = simulate.fetch_and_op_ref(sf, ri, li, "sum")
+    edges = sf.edges_global()
+    by_root = {}
+    for gr, gl in edges:
+        by_root.setdefault(int(gr), []).append(int(gl))
+    for gr, leaves in by_root.items():
+        acc = int(ri[gr])
+        for gl in leaves:   # deterministic order
+            assert lu[gl] == acc
+            acc += int(li[gl])
+        assert ro[gr] == acc
+
+
+@settings(max_examples=30, deadline=None)
+@given(star_forests())
+def test_multi_sf_degrees_one(sf):
+    multi = make_multi_sf(sf)
+    assert multi.nroots_total == sf.nedges_total
+    for r in range(multi.nranks):
+        assert (multi.degrees(r) <= 1).all() or multi.graph(r).nroots == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(star_forests(), st.integers(0, 2 ** 31 - 1))
+def test_gather_scatter_adjoint(sf, seed):
+    rng = np.random.default_rng(seed)
+    leaf = rng.standard_normal(sf.nleafspace_total).astype(np.float32)
+    multi = simulate.gather_ref(sf, leaf)
+    back = simulate.scatter_ref(sf, multi)
+    gl = sf.edges_global()[:, 1]
+    np.testing.assert_allclose(back[gl], leaf[gl])
+
+
+@settings(max_examples=30, deadline=None)
+@given(star_forests())
+def test_pattern_analysis_consistent(sf):
+    rep = pat.analyze(sf)
+    n_local = sum(p.count for p in sf.pairs if p.root_rank == p.leaf_rank)
+    n_remote = sum(p.count for p in sf.pairs if p.root_rank != p.leaf_rank)
+    if rep.kind == pat.EMPTY:
+        assert n_local == 0 and n_remote == 0
+    if rep.kind == pat.LOCAL_ONLY:
+        assert n_remote == 0 and n_local > 0
+    if rep.kind == pat.PERMUTE:
+        assert rep.permute_dst is not None
+
+
+def test_strided_detection_roundtrip():
+    from repro.core.patterns import Strided3D, detect_strided
+    for dims, strides, start in [((4, 3, 2), (1, 16, 128), 5),
+                                 ((8, 1, 1), (1, 8, 8), 0),
+                                 ((2, 5, 3), (1, 10, 64), 7)]:
+        s = Strided3D(start, dims, strides)
+        got = detect_strided(s.enumerate())
+        assert got is not None
+        np.testing.assert_array_equal(got.enumerate(), s.enumerate())
+    assert detect_strided(np.array([0, 1, 3, 4, 9])) is None

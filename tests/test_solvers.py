@@ -1,0 +1,51 @@
+"""CG / CGAsync on the SF SpMV (paper §6.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.solvers.cg import cg, cg_async
+from repro.sparse.parmat import ParCSR
+
+
+@pytest.fixture
+def spd():
+    n = 64
+    rows, cols, vals = [], [], []
+    for i in range(n):
+        rows += [i]; cols += [i]; vals += [2.5]
+        if i > 0:
+            rows += [i]; cols += [i - 1]; vals += [-1.0]
+        if i < n - 1:
+            rows += [i]; cols += [i + 1]; vals += [-1.0]
+    return ParCSR.from_global_coo(4, n, n, np.array(rows), np.array(cols),
+                                  np.array(vals))
+
+
+def test_cg_converges(spd, rng):
+    b = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    res = cg(spd.spmv, b, tol=1e-6, maxiter=300)
+    assert res.converged
+    np.testing.assert_allclose(spd.toarray() @ np.asarray(res.x),
+                               np.asarray(b), atol=1e-3)
+
+
+def test_cg_async_matches_cg(spd, rng):
+    b = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    r1 = cg(spd.spmv, b, tol=1e-6, maxiter=300)
+    r2 = cg_async(spd.spmv, b, tol=1e-6, maxiter=300, check_every=1)
+    assert r2.converged and r2.iters == r1.iters
+    np.testing.assert_allclose(np.asarray(r2.x), np.asarray(r1.x), atol=1e-3)
+
+
+def test_cg_async_no_check_runs_maxiter(spd, rng):
+    b = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    r = cg_async(spd.spmv, b, maxiter=50, check_every=0)
+    assert r.iters == 50
+
+
+def test_cg_async_check_every_k(spd, rng):
+    b = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    r = cg_async(spd.spmv, b, tol=1e-6, maxiter=300, check_every=10)
+    assert r.converged
+    assert r.iters % 10 == 0 or r.iters == 300

@@ -1,0 +1,111 @@
+"""ParCSR: SpMV/SpMV^T with SF overlap, SpMM, PtAP, assembly, fetch_rows."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse.csr import LocalCSR, csr_from_coo, csr_transpose, spgemm
+from repro.sparse.parmat import ParCSR, assemble_coo
+
+
+def rand_coo(m, n, nnz, seed):
+    r = np.random.default_rng(seed)
+    return (r.integers(0, m, nnz), r.integers(0, n, nnz),
+            r.standard_normal(nnz))
+
+
+@pytest.fixture
+def M():
+    rows, cols, vals = rand_coo(37, 37, 300, 5)
+    return ParCSR.from_global_coo(4, 37, 37, rows, cols, vals,
+                                  dtype=np.float64)
+
+
+def test_csr_roundtrip():
+    rows, cols, vals = rand_coo(9, 7, 30, 0)
+    a = csr_from_coo(9, 7, rows, cols, vals)
+    dense = np.zeros((9, 7))
+    np.add.at(dense, (rows, cols), vals)
+    np.testing.assert_allclose(a.toarray(), dense)
+    np.testing.assert_allclose(csr_transpose(a).toarray(), dense.T)
+
+
+def test_spgemm_matches_dense():
+    r1, c1, v1 = rand_coo(8, 6, 20, 1)
+    r2, c2, v2 = rand_coo(6, 9, 25, 2)
+    a = csr_from_coo(8, 6, r1, c1, v1)
+    b = csr_from_coo(6, 9, r2, c2, v2)
+    np.testing.assert_allclose(spgemm(a, b).toarray(),
+                               a.toarray() @ b.toarray(), rtol=1e-10)
+
+
+def test_spmv_and_transpose(M, rng):
+    Md = M.toarray()
+    x = rng.standard_normal(37)
+    np.testing.assert_allclose(np.asarray(M.spmv(jnp.asarray(x))), Md @ x,
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(M.spmv_transpose(jnp.asarray(x))), Md.T @ x,
+        rtol=2e-5, atol=2e-5)
+
+
+def test_spmv_kernel_path(M, rng):
+    Md = M.toarray()
+    x = rng.standard_normal(37)
+    np.testing.assert_allclose(
+        np.asarray(M.spmv(jnp.asarray(x), use_kernel=True)), Md @ x,
+        rtol=1e-4, atol=1e-4)
+
+
+def test_spmv_lvec_sf_pattern(M):
+    """The SpMV SF's leaves are contiguous -> leaf-side unpack elidable
+    (the paper's flagship §5.2 optimization)."""
+    from repro.core import patterns as pat
+    rep = pat.analyze(M.sf)
+    for key, (root_c, leaf_c) in rep.pair_contiguous.items():
+        assert leaf_c, f"lvec leaves not contiguous for pair {key}"
+
+
+def test_spmm(M, rng):
+    prows, pcols, pvals = rand_coo(37, 23, 200, 9)
+    P = ParCSR.from_global_coo(4, 37, 23, prows, pcols, pvals,
+                               dtype=np.float64)
+    AP = M.spmm(P)
+    np.testing.assert_allclose(AP.toarray(), M.toarray() @ P.toarray(),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ptap(M):
+    prows, pcols, pvals = rand_coo(37, 37, 150, 11)
+    P = ParCSR.from_global_coo(4, 37, 37, prows, pcols, pvals,
+                               dtype=np.float64)
+    G = M.ptap(P)
+    Pd, Md = P.toarray(), M.toarray()
+    np.testing.assert_allclose(G.toarray(), Pd.T @ Md @ Pd, rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_assemble_coo_fetch_and_add():
+    dense = np.zeros((10, 8))
+    trips = []
+    for q in range(4):
+        r = np.random.default_rng(q)
+        rr, cc, vv = (r.integers(0, 10, 20), r.integers(0, 8, 20),
+                      r.standard_normal(20))
+        trips.append((rr, cc, vv))
+        np.add.at(dense, (rr, cc), vv)
+    A = assemble_coo(4, 10, 8, trips, dtype=np.float64)
+    np.testing.assert_allclose(A.toarray(), dense, rtol=2e-5, atol=2e-5)
+
+
+def test_fetch_rows(M):
+    Md = M.toarray()
+    wanted = [np.array([0, 5, 36]), np.array([7]), np.zeros(0, np.int64),
+              np.array([12, 13])]
+    out = M.fetch_rows(wanted)
+    for r in range(4):
+        ip, c, v = out[r]
+        for i, grow in enumerate(np.asarray(wanted[r])):
+            got = np.zeros(37)
+            got[c[ip[i]:ip[i + 1]]] = v[ip[i]:ip[i + 1]]
+            np.testing.assert_allclose(got, Md[grow], rtol=1e-5, atol=1e-5)
