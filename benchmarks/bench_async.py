@@ -28,8 +28,8 @@ SCRIPT = textwrap.dedent("""
                      np.stack([np.full(n, src_rank), np.arange(n)], 1),
                      nleafspace=n)
     sf.setup()
-    mesh = jax.make_mesh((8,), ("sf",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((8,), ("sf",))
+    from repro.core.distributed import _smap
 
     def build(sync):
         d = DistSF(sf, axis_name="sf", lowering="general", sync_mode=sync)
@@ -41,11 +41,11 @@ SCRIPT = textwrap.dedent("""
                     acc = jnp.tanh(acc @ w)
                 l2 = d.bcast_end(pend, l[0])
                 return (l2 + acc)[None]
-            return jax.shard_map(
-                inner, mesh=mesh,
-                in_specs=(jax.sharding.PartitionSpec("sf"),) * 2
+            return _smap(
+                inner, mesh,
+                (jax.sharding.PartitionSpec("sf"),) * 2
                 + (jax.sharding.PartitionSpec(),),
-                out_specs=jax.sharding.PartitionSpec("sf"))(roots, leaves, w)
+                jax.sharding.PartitionSpec("sf"))(roots, leaves, w)
         return jax.jit(step)
 
     roots = jnp.asarray(np.random.randn(R, sf.graphs[0].nroots + 1)

@@ -30,6 +30,32 @@ def run():
                  "interpret-mode=correctness-only"))
     rows.append(("pack_ref_128x128", _t(lambda d, i: R.pack_ref(d, i),
                                         data, idx), ""))
+    # §5.2 ¶3 parametric strided pack: same 128 rows, no index array at all
+    rows.append(("pack_strided_kernel_4x4x8",
+                 _t(lambda d: K.sf_pack_strided(d, start=2, dims=(4, 4, 8),
+                                                strides=(1, 8, 64)), data),
+                 "no-index-array"))
+    # sorted segment reduction (the CUDA-atomics replacement of §5.3)
+    seg_start = np.arange(0, 128, 4, dtype=np.int64)
+    seg_len = np.full(32, 4, dtype=np.int64)
+    seg_dst = np.arange(32, dtype=np.int64)
+    tgt = jnp.zeros((64, 128), jnp.float32)
+    buf = data[:128]
+    rows.append(("unpack_segment_kernel_128rows",
+                 _t(lambda t, b: K.sf_unpack(t, b, seg_start, seg_len,
+                                             seg_dst, op="sum"), tgt, buf),
+                 ""))
+    # backend-level hot path: SFComm bcast through the pallas kernels vs jnp
+    from repro.core import SFComm
+    from benchmarks.bench_pingpong import _pingpong_sf
+    n = 1024
+    sf = _pingpong_sf(n)
+    root = jnp.arange(n, dtype=jnp.float32)
+    leaf = jnp.zeros(sf.nleafspace_total, jnp.float32)
+    for bk in ("global", "pallas"):
+        ops = SFComm(sf, backend=bk)
+        fn = jax.jit(lambda r, l, ops=ops: ops.bcast(r, l, "replace"))
+        rows.append((f"sfcomm_bcast_{bk}_{n}", _t(fn, root, leaf), ""))
     q = jnp.asarray(rng.standard_normal((256, 4, 64)).astype(np.float32))
     k = jnp.asarray(rng.standard_normal((256, 2, 64)).astype(np.float32))
     v = jnp.asarray(rng.standard_normal((256, 2, 64)).astype(np.float32))

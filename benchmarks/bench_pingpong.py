@@ -1,19 +1,30 @@
-"""Paper Table 1: SF ping-pong latency vs raw data movement.
+"""Paper Table 1: SF ping-pong latency vs raw data movement, per backend.
 
 Two ranks; rank 0 owns n roots, rank 1 holds n contiguous leaves.  SFBcast
 sends the message, SFReduce bounces it back.  The raw baseline is the same
 data movement written directly in jnp (the osu_latency analogue).  Because
 the SF's leaves are contiguous, pattern analysis elides the pack/unpack —
 what remains is SF bookkeeping, which is exactly what Table 1 measures.
+
+The ping-pong is run once per registered single-program backend (the paper's
+Table 1 column-per-implementation), and the sweep is written to
+``BENCH_pingpong.json`` so successive PRs accumulate a perf trajectory.  On
+the ``pallas`` backend the contiguous index lists engage the parametric
+strided pack kernel (§5.2 ¶3) and the duplicate-free reduce fast path.
 """
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SFOps, StarForest
+from repro.core import SFComm, StarForest
+
+DEFAULT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_pingpong.json")
 
 
 def _time(fn, iters=50):
@@ -25,26 +36,27 @@ def _time(fn, iters=50):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(sizes_bytes=(1024, 4096, 16384, 65536, 262144, 1048576, 4194304)):
+def _pingpong_sf(n: int) -> StarForest:
+    sf = StarForest(2)
+    sf.set_graph(0, n, None, np.zeros((0, 2), np.int64), nleafspace=1)
+    sf.set_graph(1, 0, None,
+                 np.stack([np.zeros(n, np.int64),
+                           np.arange(n, dtype=np.int64)], 1),
+                 nleafspace=n)
+    return sf.setup()
+
+
+def run(sizes_bytes=(1024, 4096, 16384, 65536, 262144, 1048576, 4194304),
+        backends=("global", "pallas"), json_path=DEFAULT_JSON):
     rows = []
+    report = {"bench": "pingpong", "unit": "us_per_call",
+              "sizes_bytes": list(sizes_bytes),
+              "backends": {bk: {} for bk in backends}, "raw_copy": {}}
     for nbytes in sizes_bytes:
         n = nbytes // 8    # float32 x 2 (send + bounce payload unit)
-        sf = StarForest(2)
-        sf.set_graph(0, n, None, np.zeros((0, 2), np.int64), nleafspace=1)
-        sf.set_graph(1, 0, None,
-                     np.stack([np.zeros(n, np.int64),
-                               np.arange(n, dtype=np.int64)], 1),
-                     nleafspace=n)
-        sf.setup()
-        ops = SFOps(sf)
+        sf = _pingpong_sf(n)
         root = jnp.arange(n, dtype=jnp.float32)
-        leaf = jnp.zeros(n, jnp.float32)
-
-        @jax.jit
-        def pingpong_sf(root, leaf):
-            l = ops.bcast(root, leaf, "replace")
-            r = ops.reduce(l, jnp.zeros_like(root), "sum")
-            return r
+        leaf = jnp.zeros(sf.nleafspace_total, jnp.float32)
 
         @jax.jit
         def pingpong_raw(root, leaf):
@@ -52,9 +64,23 @@ def run(sizes_bytes=(1024, 4096, 16384, 65536, 262144, 1048576, 4194304)):
             r = l + 0.0
             return r
 
-        us_sf = _time(lambda: pingpong_sf(root, leaf))
         us_raw = _time(lambda: pingpong_raw(root, leaf))
-        rows.append((f"pingpong_sf_{nbytes}B", us_sf,
-                     f"overhead_vs_raw={us_sf - us_raw:.1f}us"))
+        report["raw_copy"][str(nbytes)] = us_raw
+        for bk in backends:
+            ops = SFComm(sf, backend=bk)
+
+            @jax.jit
+            def pingpong_sf(root, leaf, ops=ops):
+                l = ops.bcast(root, leaf, "replace")
+                r = ops.reduce(l, jnp.zeros_like(root), "sum")
+                return r
+
+            us_sf = _time(lambda: pingpong_sf(root, leaf))
+            report["backends"][bk][str(nbytes)] = us_sf
+            rows.append((f"pingpong_{bk}_{nbytes}B", us_sf,
+                         f"overhead_vs_raw={us_sf - us_raw:.1f}us"))
         rows.append((f"pingpong_raw_{nbytes}B", us_raw, ""))
+    if json_path:   # pass json_path=None to skip the trajectory artifact
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
     return rows

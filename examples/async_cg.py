@@ -27,10 +27,10 @@ def main():
     M = laplacian(n)
     b = jnp.asarray(np.random.default_rng(0).standard_normal(n)
                     .astype(np.float32))
-    r1 = cg(M.spmv, b, tol=1e-6, maxiter=500)
+    r1 = cg(M, b, tol=1e-6, maxiter=500)  # ParCSR accepted directly
     print(f"CG       : iters={r1.iters} rnorm={r1.rnorm:.2e} "
           f"converged={r1.converged}")
-    r2 = cg_async(M.spmv, b, tol=1e-6, maxiter=500, check_every=1)
+    r2 = cg_async(M, b, tol=1e-6, maxiter=500, check_every=1)
     print(f"CGAsync  : iters={r2.iters} rnorm={r2.rnorm:.2e} "
           f"converged={r2.converged}")
     r3 = cg_async(M.spmv, b, tol=1e-6, maxiter=500, check_every=20)

@@ -8,8 +8,8 @@ drives collective selection.  Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (SFOps, StarForest, compose, identity_sf,
-                        make_multi_sf, patterns)
+from repro.core import (SFComm, StarForest, available_backends, compose,
+                        identity_sf, make_multi_sf, patterns)
 
 # --- the Fig 2 graph: 3 ranks, leaves point at local or remote roots -------
 sf = StarForest(3)
@@ -22,7 +22,12 @@ sf.setup()
 print(sf)
 print("degrees per rank:", [sf.degrees(r).tolist() for r in range(3)])
 
-ops = SFOps(sf)
+# SFComm picks a backend (paper §4: -sf_backend); name one to override,
+# e.g. SFComm(sf, backend="pallas") forces the kernel pack/unpack path.
+ops = SFComm(sf)
+print("registered backends:", available_backends(),
+      "| auto-selected:", ops.backend_name,
+      "| forced override:", SFComm(sf, backend="pallas").backend_name)
 roots = jnp.arange(10, 10 + sf.nroots_total, dtype=jnp.float32)
 leaves = jnp.zeros(sf.nleafspace_total, jnp.float32)
 

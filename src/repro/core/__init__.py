@@ -3,28 +3,40 @@
 Public API:
 
   StarForest, RankGraph      graph template + setup (two-sided info)
+  SFComm                     user-facing facade over the backend registry
+  select_backend, register_backend, available_backends
+                             §4–§5 implementation selection (-sf_backend)
   SFOps                      jit/grad-friendly ops on global arrays
   DistSF                     shard_map lowering to jax.lax collectives
   compose, compose_inverse, embed_roots, embed_leaves, make_multi_sf
   patterns.analyze           §5.2 pattern discovery / collective selection
+  redplan                    shared sort-segment reduction machinery (§3.3)
 """
 
 from .graph import RankGraph, StarForest, ragged_offsets
 from .mpiops import Op, get_op
 from .ops import PendingComm, SFOps
 from .plan import GlobalPlan, PaddedPlan, build_global_plan, build_padded_plan
+from .redplan import ReductionPlan, build_reduction_plan
 from .compose import (compose, compose_inverse, embed_leaves, embed_roots,
                       identity_sf, make_multi_sf)
 from .distributed import DistPending, DistSF, pad_ragged, unpad_ragged
-from . import patterns, simulate
+from .backend import (GlobalBackend, PallasBackend, SFBackend, SFComm,
+                      ShardmapBackend, available_backends, make_backend,
+                      register_backend, select_backend)
+from . import patterns, redplan, simulate
 
 __all__ = [
     "RankGraph", "StarForest", "ragged_offsets",
     "Op", "get_op",
     "PendingComm", "SFOps",
     "GlobalPlan", "PaddedPlan", "build_global_plan", "build_padded_plan",
+    "ReductionPlan", "build_reduction_plan",
     "compose", "compose_inverse", "embed_leaves", "embed_roots",
     "identity_sf", "make_multi_sf",
     "DistPending", "DistSF", "pad_ragged", "unpad_ragged",
-    "patterns", "simulate",
+    "SFBackend", "SFComm", "GlobalBackend", "ShardmapBackend",
+    "PallasBackend", "available_backends", "make_backend",
+    "register_backend", "select_backend",
+    "patterns", "redplan", "simulate",
 ]

@@ -1,0 +1,531 @@
+"""Registry-selected SF execution backends (paper §4–§5).
+
+PetscSF's defining design is a small API backed by multiple selectable
+implementations — Basic (two-sided MPI), Neighbor, Window, and the CUDA/
+NVSHMEM-aware variants — chosen per architecture and communication pattern at
+setup time via ``-sf_backend``.  This module is that layer for the JAX port:
+
+  ``"global"``    today's :class:`repro.core.ops.SFOps` — jit/grad-friendly
+                  jnp ops on global concatenated arrays (GSPMD decides the
+                  actual partitioning), the Basic-backend analogue.
+  ``"shardmap"``  today's :class:`repro.core.distributed.DistSF` — explicit
+                  rank decomposition lowered to jax.lax collectives inside
+                  ``shard_map``, the Neighbor/NVSHMEM analogue.
+  ``"pallas"``    the general pack → exchange → unpack path routed through
+                  the Pallas device kernels (:mod:`repro.kernels.sf_pack`,
+                  :mod:`repro.kernels.sf_unpack`) — the CUDA pack-kernel
+                  analogue of §5.3, with the §5.2 ¶3 parametric multi-strided
+                  pack engaged whenever the pack index list is a 3D-subdomain
+                  enumeration.
+
+``select_backend`` mirrors ``-sf_backend``'s default logic: an explicit hint
+wins; a mesh whose size matches the SF's rank count selects ``"shardmap"``;
+general-pattern SFs on a real accelerator take the kernel path; everything
+else uses ``"global"``.  ``register_backend`` lets downstream code add
+implementations (the paper's extensibility argument) without touching this
+module.
+
+The user-facing object is :class:`SFComm`: build once per StarForest, then
+call ``bcast``/``reduce``/``fetch_and_op``/``gather``/``scatter`` on global
+arrays regardless of which backend executes them.  Every backend must agree
+with the :mod:`repro.core.simulate` numpy oracle — the per-backend
+conformance suite in ``tests/test_backends.py`` enforces this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, \
+    runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import StarForest
+from .mpiops import Op, get_op
+from .ops import PendingComm, SFOps, _apply_unique
+from .plan import GlobalPlan, build_global_plan
+from .distributed import DistSF
+from . import patterns as pat
+from ..kernels import ops as kops
+
+__all__ = [
+    "SFBackend", "SFComm",
+    "register_backend", "available_backends", "make_backend",
+    "select_backend",
+    "GlobalBackend", "ShardmapBackend", "PallasBackend",
+]
+
+
+@runtime_checkable
+class SFBackend(Protocol):
+    """What every SF execution backend provides (paper §3.2 op set).
+
+    All data arguments are *global concatenated* arrays: ``rootdata`` of
+    shape ``(sf.nroots_total, *unit)`` and ``leafdata`` of shape
+    ``(sf.nleafspace_total, *unit)`` — the layout of the
+    :mod:`repro.core.simulate` oracle.
+    """
+
+    name: str
+
+    def bcast_begin(self, rootdata, op="replace"): ...
+    def bcast_end(self, pending, leafdata): ...
+    def bcast(self, rootdata, leafdata, op="replace"): ...
+    def reduce_begin(self, leafdata, op="sum"): ...
+    def reduce_end(self, pending, rootdata): ...
+    def reduce(self, leafdata, rootdata, op="sum"): ...
+    def fetch_and_op(self, rootdata, leafdata, op="sum"): ...
+    def gather(self, leafdata): ...
+    def scatter(self, multirootdata, leafdata=None): ...
+
+
+# --------------------------------------------------------------------------
+# registry (PetscFunctionList analogue for -sf_backend)
+# --------------------------------------------------------------------------
+BackendFactory = Callable[..., "SFBackend"]
+_REGISTRY: Dict[str, BackendFactory] = {}
+
+
+def register_backend(name: str, factory: BackendFactory, *,
+                     overwrite: bool = False) -> None:
+    """Register a backend factory ``factory(sf, mesh=None, **kwargs)``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"SF backend {name!r} already registered")
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> list:
+    return sorted(_REGISTRY)
+
+
+def make_backend(name: str, sf: StarForest, **kwargs) -> "SFBackend":
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown SF backend {name!r}; registered: "
+                         f"{available_backends()}") from None
+    return factory(sf, **kwargs)
+
+
+def select_backend(sf: StarForest, mesh=None, hint: Optional[str] = None
+                   ) -> str:
+    """Pick a backend name for ``sf`` (the ``-sf_backend`` default logic).
+
+    Order: an explicit ``hint`` wins (validated against the registry); a
+    ``mesh`` whose device count matches ``sf.nranks`` selects the explicit
+    shard_map decomposition; general-pattern SFs on an accelerator take the
+    Pallas kernel path (on CPU the kernels only interpret, so the jnp global
+    path is faster); everything else — including the allgather/permute
+    patterns whose §5.2 lowerings live in the shard_map/global paths —
+    defaults to ``"global"``.
+    """
+    sf.setup()
+    if hint is not None:
+        if hint not in _REGISTRY:
+            raise ValueError(f"unknown SF backend hint {hint!r}; registered: "
+                             f"{available_backends()}")
+        return hint
+    if mesh is not None and sf.nranks > 1 \
+            and int(np.prod(mesh.devices.shape)) == sf.nranks:
+        return "shardmap"
+    rep = pat.analyze(sf)
+    # kernels only compile (Mosaic) on TPU; everywhere else they interpret,
+    # so the jnp global path is the faster default
+    if rep.kind == pat.GENERAL and jax.default_backend() == "tpu":
+        return "pallas"
+    return "global"
+
+
+# --------------------------------------------------------------------------
+# "global" — SFOps on global arrays (the Basic backend analogue)
+# --------------------------------------------------------------------------
+class GlobalBackend(SFOps):
+    """jnp ops on global concatenated arrays (GSPMD-friendly)."""
+
+    name = "global"
+
+
+# --------------------------------------------------------------------------
+# "pallas" — kernel pack/unpack on the general path (paper §5.2–§5.3)
+# --------------------------------------------------------------------------
+class PallasBackend:
+    """Global-array execution with the Pallas pack/unpack kernels on the
+    hot path.
+
+    Packs are the scalar-prefetch gather kernel (``sf_pack.pack``), or the
+    parametric multi-strided kernel (``sf_pack.pack_strided``) when the pack
+    index list enumerates a 3D subdomain (paper §5.2 ¶3 — detected by the
+    same machinery that powers :class:`repro.core.patterns.PatternReport`).
+    Reductions pack directly in *sorted* slot order, segment-reduce with the
+    ``sf_unpack`` kernel (the CUDA-atomics replacement), and finish with one
+    duplicate-free scatter.  Kernels interpret on CPU and compile to Mosaic
+    on TPU.
+    """
+
+    name = "pallas"
+
+    def __init__(self, sf: StarForest, plan: Optional[GlobalPlan] = None,
+                 interpret: Optional[bool] = None):
+        sf.setup()
+        self.sf = sf
+        self.plan = plan or build_global_plan(sf)
+        self.interpret = kops.default_interpret() if interpret is None \
+            else bool(interpret)
+        p, red = self.plan, self.plan.red
+        # setup-time index products (PetscSFSetUp analogue)
+        self._gl_sorted = p.gl[red.perm]       # pack list for reduce
+        self._gr_sorted = p.gr[red.perm]
+        # §5.2 ¶3: engage the parametric strided pack when the index list is
+        # exactly a 3D-subdomain enumeration (contiguous is the 1D case)
+        self._bcast_strided = pat.detect_strided(p.gr) if p.nedges else None
+        self._reduce_strided = pat.detect_strided(self._gl_sorted) \
+            if p.nedges else None
+
+    # ------------------------------------------------------------ plumbing
+    def _pack(self, data: jnp.ndarray, idx: np.ndarray,
+              strided: Optional[pat.Strided3D] = None) -> jnp.ndarray:
+        """rows ``data[idx]`` via the pack kernel (strided variant when the
+        enumeration is parametric)."""
+        if strided is None:
+            return kops.pack_rows(data, idx, interpret=self.interpret)
+        data = jnp.asarray(data)
+        unit = data.shape[1:]
+        usize = int(np.prod(unit)) if unit else 1
+        M = int(np.size(idx))
+        if M == 0 or usize == 0 or data.shape[0] == 0:
+            return jnp.take(data, jnp.asarray(idx), axis=0)
+        out = kops.sf_pack_strided(data.reshape(data.shape[0], usize),
+                                   start=strided.start, dims=strided.dims,
+                                   strides=strided.strides,
+                                   interpret=self.interpret)
+        return out.reshape((M,) + tuple(unit))
+
+    def _segment_reduce(self, sorted_vals: jnp.ndarray, opname: str
+                        ) -> jnp.ndarray:
+        """sf_unpack kernel over the sorted slot buffer -> one row/segment."""
+        red = self.plan.red
+        return kops.segment_reduce_rows(
+            sorted_vals, red.seg_first, red.seg_len, num_segments=red.nseg,
+            Lmax=red.max_valid_seg_len, op=opname, interpret=self.interpret)
+
+    # ------------------------------------------------------------- bcast
+    def bcast_begin(self, rootdata: jnp.ndarray, op="replace") -> PendingComm:
+        op = get_op(op)
+        vals = self._pack(rootdata, self.plan.gr, self._bcast_strided)
+        return PendingComm("bcast", vals, op, self)
+
+    def bcast_end(self, pending: PendingComm,
+                  leafdata: jnp.ndarray) -> jnp.ndarray:
+        assert pending.kind == "bcast"
+        # each leaf has exactly one root -> unique destinations
+        return _apply_unique(jnp.asarray(leafdata), self.plan.gl,
+                             pending.payload, pending.op)
+
+    def bcast(self, rootdata, leafdata, op="replace"):
+        return self.bcast_end(self.bcast_begin(rootdata, op), leafdata)
+
+    # ------------------------------------------------------------- reduce
+    def reduce_begin(self, leafdata: jnp.ndarray, op="sum") -> PendingComm:
+        """Pack leaf values directly in sorted slot order (the pack and the
+        determinism sort are one gather)."""
+        op = get_op(op)
+        vals = self._pack(leafdata, self._gl_sorted, self._reduce_strided)
+        return PendingComm("reduce", vals, op, self)
+
+    def reduce_end(self, pending: PendingComm,
+                   rootdata: jnp.ndarray) -> jnp.ndarray:
+        assert pending.kind == "reduce"
+        p, red, op = self.plan, self.plan.red, pending.op
+        rootdata = jnp.asarray(rootdata)
+        sv = pending.payload                   # (E, *unit), sorted by root
+        if p.nedges == 0:
+            return rootdata
+        if op.name == "replace":
+            # deterministic last-writer wins, precomputed at setup
+            return rootdata.at[red.win_dst].set(
+                jnp.take(sv, red.win_src, axis=0).astype(rootdata.dtype),
+                unique_indices=True)
+        usize = int(np.prod(sv.shape[1:])) if sv.shape[1:] else 1
+        if op.name in ("sum", "prod", "max", "min") and usize:
+            if red.duplicate_free:
+                # one slot per root: the unpack scatter is the reduction
+                return _apply_unique(rootdata, red.dst_sorted, sv, op)
+            seg = self._segment_reduce(sv, op.name)
+            return _apply_unique(rootdata, red.seg_dst, seg, op)
+        # logical ops reduce as max/min over the int32 view (as mpiops does)
+        seg = op.segment(sv, red.seg_of_slot, red.nseg)
+        return _apply_unique(rootdata, red.seg_dst, seg, op)
+
+    def reduce(self, leafdata, rootdata, op="sum"):
+        return self.reduce_end(self.reduce_begin(leafdata, op), rootdata)
+
+    # -------------------------------------------------------- fetch-and-op
+    def fetch_and_op(self, rootdata: jnp.ndarray, leafdata: jnp.ndarray,
+                     op="sum") -> Tuple[jnp.ndarray, jnp.ndarray]:
+        op = get_op(op)
+        if op.name != "sum":
+            raise NotImplementedError("fetch_and_op supports op='sum' "
+                                      "(fetch-and-add), as used by the paper")
+        p, red = self.plan, self.plan.red
+        rootdata = jnp.asarray(rootdata)
+        leafdata = jnp.asarray(leafdata)
+        if p.nedges == 0:
+            return rootdata, leafdata
+        sv = self._pack(leafdata, self._gl_sorted, self._reduce_strided)
+        csum = jnp.cumsum(sv, axis=0)
+        head = jnp.take(csum, red.seg_start_of_slot, axis=0) - jnp.take(
+            sv, red.seg_start_of_slot, axis=0)
+        excl = csum - sv - head              # exclusive in-segment prefix
+        base = self._pack(rootdata, self._gr_sorted)
+        fetched_sorted = base + excl.astype(rootdata.dtype)
+        fetched = self._pack(fetched_sorted, red.inv_perm)
+        leafupdate = leafdata.at[p.gl].set(
+            fetched.astype(leafdata.dtype), unique_indices=True)
+        root_out = rootdata.at[self._gr_sorted].add(
+            sv.astype(rootdata.dtype))
+        return root_out, leafupdate
+
+    # ------------------------------------------------------ gather/scatter
+    @property
+    def nmulti(self) -> int:
+        return self.plan.nmulti
+
+    def gather(self, leafdata: jnp.ndarray) -> jnp.ndarray:
+        p = self.plan
+        leafdata = jnp.asarray(leafdata)
+        out = jnp.zeros((p.nmulti,) + leafdata.shape[1:], dtype=leafdata.dtype)
+        if p.nedges == 0:
+            return out
+        vals = self._pack(leafdata, p.gl)
+        return out.at[p.multi_slot].set(vals, unique_indices=True)
+
+    def scatter(self, multirootdata: jnp.ndarray,
+                leafdata: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        p = self.plan
+        multirootdata = jnp.asarray(multirootdata)
+        if leafdata is None:
+            leafdata = jnp.zeros((p.nleafspace,) + multirootdata.shape[1:],
+                                 dtype=multirootdata.dtype)
+        leafdata = jnp.asarray(leafdata)
+        if p.nedges == 0:
+            return leafdata
+        vals = self._pack(multirootdata, p.multi_slot)
+        return leafdata.at[p.gl].set(vals.astype(leafdata.dtype),
+                                     unique_indices=True)
+
+    def compute_degrees(self) -> jnp.ndarray:
+        ones = jnp.ones((self.plan.nleafspace,), dtype=jnp.int32)
+        return self.reduce(ones, jnp.zeros((self.plan.nroots,), jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# "shardmap" — DistSF behind the global-array facade
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _DeferredComm:
+    """Facade-level pending token for the shardmap backend: the pack +
+    collective + unpack run fused inside one compiled shard_map program, so
+    the overlap the begin/end split advertises happens in the XLA scheduler
+    (DESIGN.md §3.2), not at this Python boundary."""
+
+    kind: str
+    owner: "ShardmapBackend"
+    data: Any
+    op: Any
+
+    def end(self, data):
+        if self.kind == "bcast":
+            return self.owner.bcast(self.data, data, self.op)
+        return self.owner.reduce(self.data, data, self.op)
+
+
+class ShardmapBackend:
+    """Explicit rank decomposition: pad per-rank shards, run the DistSF
+    shard_map lowering over a device mesh, trim the result."""
+
+    name = "shardmap"
+
+    def __init__(self, sf: StarForest, mesh=None, axis_name: str = "sf",
+                 lowering: str = "auto", sync_mode: bool = False,
+                 use_kernels: Optional[bool] = None, plan=None):
+        sf.setup()
+        self.sf = sf
+        self.dist = DistSF(sf, axis_name=axis_name, plan=plan,
+                           lowering=lowering, sync_mode=sync_mode,
+                           use_kernels=use_kernels)
+        if mesh is None:
+            devs = jax.devices()
+            if len(devs) < sf.nranks:
+                raise ValueError(
+                    f"shardmap backend needs one device per rank "
+                    f"({sf.nranks}), have {len(devs)}; pass a mesh or pick "
+                    f"another backend")
+            mesh = jax.make_mesh((sf.nranks,), (axis_name,),
+                                 devices=devs[: sf.nranks])
+        if int(np.prod(mesh.devices.shape)) != sf.nranks:
+            raise ValueError(
+                f"mesh has {int(np.prod(mesh.devices.shape))} devices but "
+                f"the SF has {sf.nranks} ranks")
+        self.mesh = mesh
+        self._fns: Dict[Tuple[str, str], Callable] = {}
+        self._globalops: Optional[GlobalBackend] = None
+
+    # ------------------------------------------------------------ plumbing
+    def _fn(self, kind: str, opname: str) -> Callable:
+        key = (kind, opname)
+        if key not in self._fns:
+            maker = {"bcast": self.dist.make_bcast_fn,
+                     "reduce": self.dist.make_reduce_fn,
+                     "fetch": self.dist.make_fetch_fn}[kind]
+            self._fns[key] = maker(self.mesh, op=opname)
+        return self._fns[key]
+
+    def _split(self, data, offsets) -> list:
+        data = np.asarray(data)
+        return [data[int(offsets[r]): int(offsets[r + 1])]
+                for r in range(self.sf.nranks)]
+
+    def _root_stack(self, rootdata):
+        return jnp.asarray(self.dist.pad_root_stack(
+            self._split(rootdata, self.sf.root_offsets())))
+
+    def _leaf_stack(self, leafdata):
+        return jnp.asarray(self.dist.pad_leaf_stack(
+            self._split(leafdata, self.sf.leaf_offsets())))
+
+    # ------------------------------------------------------------ ops
+    def bcast_begin(self, rootdata, op="replace") -> _DeferredComm:
+        return _DeferredComm("bcast", self, rootdata, op)
+
+    def bcast_end(self, pending: _DeferredComm, leafdata):
+        return pending.end(leafdata)
+
+    def bcast(self, rootdata, leafdata, op="replace"):
+        out = self._fn("bcast", get_op(op).name)(
+            self._root_stack(rootdata), self._leaf_stack(leafdata))
+        return jnp.asarray(np.concatenate(self.dist.unpad_leaf_stack(out))
+                           if self.sf.nleafspace_total else
+                           np.zeros((0,) + np.asarray(leafdata).shape[1:],
+                                    np.asarray(leafdata).dtype))
+
+    def reduce_begin(self, leafdata, op="sum") -> _DeferredComm:
+        return _DeferredComm("reduce", self, leafdata, op)
+
+    def reduce_end(self, pending: _DeferredComm, rootdata):
+        return pending.end(rootdata)
+
+    def reduce(self, leafdata, rootdata, op="sum"):
+        out = self._fn("reduce", get_op(op).name)(
+            self._leaf_stack(leafdata), self._root_stack(rootdata))
+        return jnp.asarray(np.concatenate(self.dist.unpad_root_stack(out))
+                           if self.sf.nroots_total else
+                           np.zeros((0,) + np.asarray(rootdata).shape[1:],
+                                    np.asarray(rootdata).dtype))
+
+    def fetch_and_op(self, rootdata, leafdata, op="sum"):
+        ro, lu = self._fn("fetch", get_op(op).name)(
+            self._root_stack(rootdata), self._leaf_stack(leafdata))
+        root_out = jnp.asarray(np.concatenate(
+            self.dist.unpad_root_stack(ro)))
+        leafupd = jnp.asarray(np.concatenate(
+            self.dist.unpad_leaf_stack(lu)))
+        return root_out, leafupd
+
+    # gather/scatter reorganize into the multi-root layout, a host-derived
+    # index transform shared with the global backend.
+    def _gops(self) -> GlobalBackend:
+        if self._globalops is None:
+            self._globalops = GlobalBackend(self.sf)
+        return self._globalops
+
+    def gather(self, leafdata):
+        return self._gops().gather(leafdata)
+
+    def scatter(self, multirootdata, leafdata=None):
+        return self._gops().scatter(multirootdata, leafdata)
+
+    def compute_degrees(self):
+        ones = jnp.ones((self.sf.nleafspace_total,), dtype=jnp.int32)
+        return self.reduce(ones, jnp.zeros((self.sf.nroots_total,),
+                                           jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# facade
+# --------------------------------------------------------------------------
+class SFComm:
+    """One StarForest, one backend, the full §3.2 op set on global arrays.
+
+    The PetscSF-object analogue: construct once (setup cost amortizes over
+    every operation), then communicate.  The backend is chosen by
+    ``select_backend`` unless named explicitly — exactly the paper's
+    ``-sf_backend`` override.
+    """
+
+    def __init__(self, sf: StarForest, backend: Optional[str] = None, *,
+                 mesh=None, **backend_kwargs):
+        sf.setup()
+        self.sf = sf
+        name = backend if backend is not None \
+            else select_backend(sf, mesh=mesh)
+        self.backend = make_backend(name, sf, mesh=mesh, **backend_kwargs)
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    # delegation ----------------------------------------------------------
+    def bcast_begin(self, rootdata, op="replace"):
+        return self.backend.bcast_begin(rootdata, op)
+
+    def bcast_end(self, pending, leafdata):
+        return self.backend.bcast_end(pending, leafdata)
+
+    def bcast(self, rootdata, leafdata, op="replace"):
+        return self.backend.bcast(rootdata, leafdata, op)
+
+    def reduce_begin(self, leafdata, op="sum"):
+        return self.backend.reduce_begin(leafdata, op)
+
+    def reduce_end(self, pending, rootdata):
+        return self.backend.reduce_end(pending, rootdata)
+
+    def reduce(self, leafdata, rootdata, op="sum"):
+        return self.backend.reduce(leafdata, rootdata, op)
+
+    def fetch_and_op(self, rootdata, leafdata, op="sum"):
+        return self.backend.fetch_and_op(rootdata, leafdata, op)
+
+    def gather(self, leafdata):
+        return self.backend.gather(leafdata)
+
+    def scatter(self, multirootdata, leafdata=None):
+        return self.backend.scatter(multirootdata, leafdata)
+
+    def compute_degrees(self):
+        return self.backend.compute_degrees()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"SFComm({self.sf!r}, backend={self.backend_name!r})"
+
+
+# --------------------------------------------------------------------------
+# built-in registrations
+# --------------------------------------------------------------------------
+def _global_factory(sf, mesh=None, plan=None):
+    return GlobalBackend(sf, plan=plan)
+
+
+def _shardmap_factory(sf, mesh=None, **kw):
+    return ShardmapBackend(sf, mesh=mesh, **kw)
+
+
+def _pallas_factory(sf, mesh=None, plan=None, interpret=None):
+    return PallasBackend(sf, plan=plan, interpret=interpret)
+
+
+register_backend("global", _global_factory)
+register_backend("shardmap", _shardmap_factory)
+register_backend("pallas", _pallas_factory)

@@ -41,12 +41,29 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from .graph import StarForest
 from .mpiops import Op, get_op
 from .plan import PaddedPlan, build_padded_plan
 from . import patterns as pat
+from ..kernels import ops as kops
 
 __all__ = ["DistSF", "DistPending", "pad_ragged", "unpad_ragged"]
+
+
+def _smap(f, mesh, in_specs, out_specs):
+    """shard_map with replication checking off (Pallas calls inside the
+    mapped function have no replication rule)."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover - newer API dropped check_rep
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
 
 
 # --------------------------------------------------------------------------
@@ -84,7 +101,7 @@ class DistSF:
 
     def __init__(self, sf: StarForest, axis_name: str = "sf",
                  plan: Optional[PaddedPlan] = None, lowering: str = "auto",
-                 sync_mode: bool = False):
+                 sync_mode: bool = False, use_kernels: Optional[bool] = None):
         sf.setup()
         self.sf = sf
         self.axis = axis_name
@@ -99,6 +116,11 @@ class DistSF:
                     f"requested lowering {lowering!r} but SF pattern is {kind!r}")
             self.lowering = lowering
         self.sync_mode = sync_mode
+        # Pallas pack/unpack kernels on the general path (paper §5.3); they
+        # compile to Mosaic on TPU and interpret elsewhere (slower there,
+        # but kept on by default so one code path is exercised everywhere —
+        # pass use_kernels=False for the plain jnp gather/segment path).
+        self.use_kernels = True if use_kernels is None else bool(use_kernels)
 
     # ------------------------------------------------------------ plumbing
     @property
@@ -112,6 +134,23 @@ class DistSF:
         """Padded scatter (garbage row absorbs padding; duplicates only
         there, so plain at[].op is deterministic for the real rows)."""
         return getattr(target.at[idx], op.at_update)(vals.astype(target.dtype))
+
+    def _pack_rows(self, data: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        """Gather ``data[idx]`` rows for the general path via the sf_pack
+        Pallas kernel (paper §5.3), or ``jnp.take`` when kernels are off."""
+        if not self.use_kernels:
+            return jnp.take(data, idx, axis=0)
+        return kops.pack_rows(data, idx)
+
+    def _segment_reduce_kernel(self, sortedv: jnp.ndarray, me,
+                               op: Op) -> jnp.ndarray:
+        """Segment-reduce the sorted slot buffer with the sf_unpack kernel
+        (the CUDA-atomics replacement, DESIGN.md §3.3)."""
+        p = self.plan
+        return kops.segment_reduce_rows(
+            sortedv, _take_row(p.red_seg_first, me),
+            _take_row(p.red_seg_len, me), num_segments=p.red_nslots,
+            Lmax=p.red_Lmax, op=op.name)
 
     def _barrier(self, *xs):
         if len(xs) == 1:
@@ -136,9 +175,9 @@ class DistSF:
             perm = [(src, dst) for src, dst in enumerate(dsts) if dst >= 0]
             buf = lax.ppermute(root_shard, self.axis, perm)
             return DistPending("bcast_perm", buf, self_vals, op)
-        # general packed all-to-all
+        # general packed all-to-all (pack via the Pallas kernel)
         sidx = _take_row(p.send_root_idx, me)            # (R, P)
-        sbuf = jnp.take(root_shard, sidx, axis=0)        # (R, P, unit) pack
+        sbuf = self._pack_rows(root_shard, sidx)         # (R, P, unit) pack
         buf = lax.all_to_all(sbuf, self.axis, split_axis=0, concat_axis=0,
                              tiled=True)
         if self.sync_mode:
@@ -180,7 +219,9 @@ class DistSF:
         me = self._me()
         self_vals = jnp.take(leaf_shard, _take_row(p.self_leaf_idx, me), axis=0)
         if self.lowering in (pat.LOCAL_ONLY, pat.EMPTY):
-            buf = jnp.zeros((p.nranks, 0) + leaf_shard.shape[1:],
+            # keep the full (R, P) slot layout: reduce_end's sort-segment
+            # machinery addresses self slots at offset R*P
+            buf = jnp.zeros((p.nranks, p.P) + leaf_shard.shape[1:],
                             leaf_shard.dtype)
             return DistPending("reduce", buf, self_vals, op)
         if self.lowering == pat.ALLGATHER and op.name == "sum":
@@ -190,9 +231,9 @@ class DistSF:
                                    tiled=False)
             return DistPending("reduce_rs", buf, self_vals, op)
         # general path (also used for permute SFs in reverse and non-sum
-        # reductions on allgather SFs)
+        # reductions on allgather SFs); pack via the Pallas kernel
         lidx = _take_row(p.recv_leaf_idx, me)            # (R, P)
-        sbuf = jnp.take(leaf_shard, lidx, axis=0)        # (R, P, unit)
+        sbuf = self._pack_rows(leaf_shard, lidx)         # (R, P, unit)
         buf = lax.all_to_all(sbuf, self.axis, split_axis=0, concat_axis=0,
                              tiled=True)
         if self.sync_mode:
@@ -210,12 +251,22 @@ class DistSF:
         flat = jnp.concatenate(
             [pending.buf.reshape((-1,) + pending.buf.shape[2:]),
              pending.self_vals], axis=0)
-        sortedv = jnp.take(flat, _take_row(p.red_perm, me), axis=0)
+        sortedv = self._pack_rows(flat, _take_row(p.red_perm, me))
         if op.name == "replace":
             wsrc = _take_row(p.replace_win_src, me)
             wdst = _take_row(p.replace_win_dst, me)
             return root_shard.at[wdst].set(
                 jnp.take(sortedv, wsrc, axis=0).astype(root_shard.dtype))
+        if self.use_kernels and op.name in ("sum", "prod", "max", "min") \
+                and sortedv.size:
+            if p.red_dup_free:
+                # every segment is one slot: reduction degenerates to the
+                # unpack scatter itself
+                return self._apply(root_shard, _take_row(p.red_dst, me),
+                                   sortedv, op)
+            seg = self._segment_reduce_kernel(sortedv, me, op)
+            return self._apply(root_shard, _take_row(p.red_seg_dst, me),
+                               seg, op)
         seg_ids = _take_row(p.red_seg_id, me)
         if op.name in ("sum", "prod", "max", "min", "lor", "land"):
             seg = op.segment(sortedv, seg_ids, p.red_nslots)
@@ -238,14 +289,14 @@ class DistSF:
         me = self._me()
         # 1) route leaf values to root ranks (same movement as reduce)
         lidx = _take_row(p.recv_leaf_idx, me)
-        sbuf = jnp.take(leaf_shard, lidx, axis=0)
+        sbuf = self._pack_rows(leaf_shard, lidx)
         buf = lax.all_to_all(sbuf, self.axis, split_axis=0, concat_axis=0,
                              tiled=True)
         self_vals = jnp.take(leaf_shard, _take_row(p.self_leaf_idx, me), axis=0)
         flat = jnp.concatenate(
             [buf.reshape((-1,) + buf.shape[2:]), self_vals], axis=0)
         perm = _take_row(p.red_perm, me)
-        sortedv = jnp.take(flat, perm, axis=0)
+        sortedv = self._pack_rows(flat, perm)
         # 2) exclusive in-segment prefix (deterministic order)
         csum = jnp.cumsum(sortedv, axis=0)
         seg_start = _take_row(p.red_seg_start, me)
@@ -327,8 +378,7 @@ class DistSF:
         def fn(roots, leaves):
             def inner(r, l):
                 return self.bcast(r[0], l[0], op=op)[None]
-            return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec),
-                                 out_specs=spec)(roots, leaves)
+            return _smap(inner, mesh, (spec, spec), spec)(roots, leaves)
 
         return jax.jit(fn, in_shardings=(shard, shard), out_shardings=shard)
 
@@ -339,8 +389,7 @@ class DistSF:
         def fn(leaves, roots):
             def inner(l, r):
                 return self.reduce(l[0], r[0], op=op)[None]
-            return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec),
-                                 out_specs=spec)(leaves, roots)
+            return _smap(inner, mesh, (spec, spec), spec)(leaves, roots)
 
         return jax.jit(fn, in_shardings=(shard, shard), out_shardings=shard)
 
@@ -352,8 +401,7 @@ class DistSF:
             def inner(r, l):
                 ro, lu = self.fetch_and_op(r[0], l[0], op=op)
                 return ro[None], lu[None]
-            return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec),
-                                 out_specs=(spec, spec))(roots, leaves)
+            return _smap(inner, mesh, (spec, spec), (spec, spec))(roots, leaves)
 
         return jax.jit(fn, in_shardings=(shard, shard),
                        out_shardings=(shard, shard))

@@ -187,7 +187,6 @@ class StarForest:
                 continue
             if g.nleaves and g.remote_rank.max() >= self.nranks:
                 raise ValueError("remote rank out of range")
-            nroots_of = lambda p: self._graphs[p].nroots if self._graphs[p] else 0
 
         # Validate root offsets against owner nroots.
         for q in range(self.nranks):

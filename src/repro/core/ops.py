@@ -140,9 +140,7 @@ class SFOps:
         base = jnp.take(rootdata, p.gr[p.red_perm], axis=0)
         fetched_sorted = base + excl.astype(rootdata.dtype)
         # un-permute: fetched[perm[i]] = fetched_sorted[i]
-        inv = np.empty_like(p.red_perm)
-        inv[p.red_perm] = np.arange(p.red_perm.shape[0])
-        fetched = jnp.take(fetched_sorted, inv, axis=0)
+        fetched = jnp.take(fetched_sorted, p.red.inv_perm, axis=0)
         leafupdate = leafdata.at[p.gl].set(
             fetched.astype(leafdata.dtype), unique_indices=True)
         root_out = rootdata.at[p.gr].add(vals.astype(rootdata.dtype))

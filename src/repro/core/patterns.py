@@ -174,7 +174,19 @@ def _permute_dsts(sf: StarForest) -> Optional[List[int]]:
 
 
 def analyze(sf: StarForest) -> PatternReport:
+    """Pattern discovery for ``sf``; memoized on the instance (the graph is
+    immutable after ``setup()``, and both plan builders plus
+    ``select_backend`` consult the report)."""
     sf._require_setup()
+    cached = getattr(sf, "_pattern_report", None)
+    if cached is not None:
+        return cached
+    rep = _analyze(sf)
+    sf._pattern_report = rep
+    return rep
+
+
+def _analyze(sf: StarForest) -> PatternReport:
     n_local = sum(pi.count for pi in sf.pairs if pi.root_rank == pi.leaf_rank)
     n_remote = sum(pi.count for pi in sf.pairs if pi.root_rank != pi.leaf_rank)
 

@@ -10,6 +10,10 @@ The TPU analogue collected here:
   the shard_map all-to-all lowering in :mod:`repro.core.distributed`,
   including the sort-segment replacement for CUDA atomics (DESIGN.md §3.3).
 
+Both plans derive their sort-segment reduction machinery from the single
+implementation in :mod:`repro.core.redplan` — ``GlobalPlan`` over the global
+edge list, ``PaddedPlan`` once per root rank over its padded slot space.
+
 Padding convention: data shards get one trailing *garbage row*; every padded
 index points at it, so packs/unpacks need no masks (stores to the garbage row
 are dropped when the shard is trimmed).  This mirrors the paper's trick of
@@ -19,94 +23,94 @@ communicating from/to user buffers without extra branches.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 
 from .graph import StarForest, ragged_offsets
+from .redplan import ReductionPlan, build_reduction_plan
 from . import patterns as pat
 
 __all__ = ["GlobalPlan", "PaddedPlan", "build_global_plan", "build_padded_plan"]
 
-
-def _exclusive_segment_starts(seg_ids: np.ndarray) -> np.ndarray:
-    """Position of the first element of each element's segment."""
-    if seg_ids.size == 0:
-        return np.zeros(0, dtype=np.int64)
-    change = np.empty(seg_ids.size, dtype=bool)
-    change[0] = True
-    change[1:] = seg_ids[1:] != seg_ids[:-1]
-    starts = np.flatnonzero(change)
-    return starts[np.cumsum(change) - 1]
+# Deterministic order key: (leaf rank, edge index) packed into one int64.
+_RANK_STRIDE = 10 ** 12
 
 
 @dataclasses.dataclass(frozen=True)
 class GlobalPlan:
-    """Setup products for executing SF ops on *global* concatenated arrays."""
+    """Setup products for executing SF ops on *global* concatenated arrays.
+
+    Reduce determinism comes from the shared sort-segment machinery in
+    ``red`` (:mod:`repro.core.redplan`); the ``red_*``/``replace_last``
+    accessors below are views of it under the names the execution paths use.
+    """
 
     nroots: int
     nleafspace: int
     gr: np.ndarray            # (E,) global root id per edge (deterministic order)
     gl: np.ndarray            # (E,) global leaf id per edge
-    # Reduce determinism: stable sort of edges by destination root.
-    red_perm: np.ndarray      # (E,) edge order sorted by (gr, edge order)
-    red_seg_root: np.ndarray  # (S,) destination root of each segment
-    red_seg_of_edge: np.ndarray  # (E,) segment id of sorted edge
-    red_seg_start: np.ndarray    # (E,) index (into sorted order) of segment head
-    replace_last: np.ndarray  # (S,) sorted-position of last edge per segment
     # Multi-SF layout (paper §3.2): slot of each edge in multi-root space.
     nmulti: int
     multi_slot: np.ndarray    # (E,)
     degrees: np.ndarray       # (nroots,) root degrees
+    red: ReductionPlan        # shared sort-segment reduction machinery
     pattern: pat.PatternReport = None
 
     @property
     def nedges(self) -> int:
         return int(self.gr.shape[0])
 
+    # views of the shared machinery (single source of truth: ``red``)
+    @property
+    def red_perm(self) -> np.ndarray:
+        """(E,) edge order sorted by (gr, edge order)."""
+        return self.red.perm
+
+    @property
+    def red_seg_root(self) -> np.ndarray:
+        """(S,) destination root of each segment."""
+        return self.red.seg_dst
+
+    @property
+    def red_seg_of_edge(self) -> np.ndarray:
+        """(E,) segment id of sorted edge."""
+        return self.red.seg_of_slot
+
+    @property
+    def red_seg_start(self) -> np.ndarray:
+        """(E,) index (into sorted order) of segment head."""
+        return self.red.seg_start_of_slot
+
+    @property
+    def replace_last(self) -> np.ndarray:
+        """(S,) sorted-position of last edge per segment."""
+        return self.red.win_src
+
 
 def build_global_plan(sf: StarForest) -> GlobalPlan:
     edges = sf.edges_global()
     gr, gl = edges[:, 0], edges[:, 1]
     E = gr.shape[0]
-    perm = np.argsort(gr, kind="stable")
-    gr_s = gr[perm]
-    if E:
-        change = np.empty(E, dtype=bool)
-        change[0] = True
-        change[1:] = gr_s[1:] != gr_s[:-1]
-        seg_of = np.cumsum(change) - 1
-        seg_root = gr_s[np.flatnonzero(change)]
-        seg_start = _exclusive_segment_starts(gr_s)
-        # last position per segment
-        last = np.flatnonzero(np.append(change[1:], True))
-    else:
-        seg_of = np.zeros(0, dtype=np.int64)
-        seg_root = np.zeros(0, dtype=np.int64)
-        seg_start = np.zeros(0, dtype=np.int64)
-        last = np.zeros(0, dtype=np.int64)
+    red = build_reduction_plan(gr)
 
     degrees = np.zeros(sf.nroots_total, dtype=np.int64)
     np.add.at(degrees, gr, 1)
     base = np.zeros(sf.nroots_total + 1, dtype=np.int64)
     np.cumsum(degrees, out=base[1:])
     # occurrence index of each sorted edge within its root = pos - seg_start
-    occ = np.arange(E, dtype=np.int64) - seg_start
+    occ = np.arange(E, dtype=np.int64) - red.seg_start_of_slot
     multi_slot = np.zeros(E, dtype=np.int64)
-    multi_slot[perm] = base[gr_s] + occ
+    multi_slot[red.perm] = base[red.dst_sorted] + occ
 
     return GlobalPlan(
         nroots=sf.nroots_total,
         nleafspace=sf.nleafspace_total,
         gr=gr, gl=gl,
-        red_perm=perm,
-        red_seg_root=seg_root,
-        red_seg_of_edge=seg_of,
-        red_seg_start=seg_start,
-        replace_last=last,
         nmulti=int(degrees.sum()),
         multi_slot=multi_slot,
         degrees=degrees,
+        red=red,
         pattern=pat.analyze(sf),
     )
 
@@ -149,6 +153,12 @@ class PaddedPlan:
     replace_win_dst: np.ndarray  # (R, win_pad) destination root offset
     pattern: pat.PatternReport = None
     permute_dst: Optional[List[int]] = None
+    # Pallas segment-reduce kernel metadata (garbage segments get length 0,
+    # so the kernel never touches padding runs).
+    red_seg_first: np.ndarray = None  # (R, red_nslots) segment head position
+    red_seg_len: np.ndarray = None    # (R, red_nslots) valid segment lengths
+    red_Lmax: int = 1                 # panel height bound across ranks
+    red_dup_free: bool = False        # every rank's segments have length 1
 
 
 def build_padded_plan(sf: StarForest) -> PaddedPlan:
@@ -195,7 +205,9 @@ def build_padded_plan(sf: StarForest) -> PaddedPlan:
     red_seg_dst = np.full((R, nslots), root_garbage, dtype=np.int64)
     red_seg_start = np.zeros((R, nslots), dtype=np.int64)
     red_is_valid = np.zeros((R, nslots), dtype=bool)
-    win_lists: List[Tuple[np.ndarray, np.ndarray]] = []
+    red_seg_first = np.zeros((R, nslots), dtype=np.int64)
+    red_seg_len = np.zeros((R, nslots), dtype=np.int64)
+    rank_reds: List[ReductionPlan] = []
     for r in range(R):
         dst = np.full(nslots, root_garbage, dtype=np.int64)
         # order key: the deterministic (leaf rank q, edge index) order.
@@ -206,51 +218,32 @@ def build_padded_plan(sf: StarForest) -> PaddedPlan:
                 continue
             slots = q * P + np.arange(pi.count)
             dst[slots] = pi.root_idx
-            order[slots] = q * (10 ** 12) + pi.edge_idx
+            order[slots] = q * _RANK_STRIDE + pi.edge_idx
         pi = self_pairs.get(r)
         if pi is not None:
             slots = R * P + np.arange(pi.count)
             dst[slots] = pi.root_idx
-            order[slots] = r * (10 ** 12) + pi.edge_idx
-        valid = dst != root_garbage
-        # sort slots by (dst, order); invalid last.
-        key_dst = np.where(valid, dst, np.iinfo(np.int64).max)
-        perm = np.lexsort((order, key_dst))
-        dst_s = dst[perm]
-        valid_s = valid[perm]
-        red_perm[r] = perm
-        red_inv_perm[r][perm] = np.arange(nslots)
-        red_dst[r] = np.where(valid_s, dst_s, root_garbage)
-        seg_start = _exclusive_segment_starts(dst_s)
-        red_seg_start[r] = seg_start
-        red_is_valid[r] = valid_s
-        # static segment ids and per-segment destination (garbage slots form
-        # trailing segments that land in the garbage row)
-        if nslots:
-            change = np.empty(nslots, dtype=bool)
-            change[0] = True
-            change[1:] = dst_s[1:] != dst_s[:-1]
-            seg_ids = np.cumsum(change) - 1
-            red_seg_id[r] = seg_ids
-            heads = np.flatnonzero(change)
-            seg_dst = np.where(valid_s[heads], dst_s[heads], root_garbage)
-            red_seg_dst[r, : heads.size] = seg_dst
-        # replace winners: last valid position of each valid segment
-        if valid_s.any():
-            v_pos = np.flatnonzero(valid_s)
-            d = dst_s[v_pos]
-            is_last = np.append(d[1:] != d[:-1], True)
-            win_pos = v_pos[is_last]
-            win_lists.append((win_pos, dst_s[win_pos]))
-        else:
-            win_lists.append((np.zeros(0, np.int64), np.zeros(0, np.int64)))
+            order[slots] = r * _RANK_STRIDE + pi.edge_idx
+        red = build_reduction_plan(dst, order, garbage=root_garbage)
+        rank_reds.append(red)
+        red_perm[r] = red.perm
+        red_inv_perm[r] = red.inv_perm
+        red_dst[r] = red.dst_sorted
+        red_seg_id[r] = red.seg_of_slot
+        red_seg_start[r] = red.seg_start_of_slot
+        red_is_valid[r] = red.valid_sorted
+        red_seg_dst[r, : red.nseg] = red.seg_dst
+        red_seg_first[r, : red.nseg] = red.seg_first
+        # garbage segments keep length 0: the segment-reduce kernel then
+        # emits identities for them, absorbed by the garbage row.
+        red_seg_len[r, : red.nseg_valid] = red.seg_len[: red.nseg_valid]
 
-    win_pad = max(max((w[0].size for w in win_lists), default=0), 1)
+    win_pad = max(max((red.nseg_valid for red in rank_reds), default=0), 1)
     replace_win_src = np.zeros((R, win_pad), dtype=np.int64)
     replace_win_dst = np.full((R, win_pad), root_garbage, dtype=np.int64)
-    for r, (wsrc, wdst) in enumerate(win_lists):
-        replace_win_src[r, : wsrc.size] = wsrc
-        replace_win_dst[r, : wdst.size] = wdst
+    for r, red in enumerate(rank_reds):
+        replace_win_src[r, : red.nseg_valid] = red.win_src
+        replace_win_dst[r, : red.nseg_valid] = red.win_dst
 
     rep = pat.analyze(sf)
     return PaddedPlan(
@@ -278,4 +271,9 @@ def build_padded_plan(sf: StarForest) -> PaddedPlan:
         replace_win_dst=replace_win_dst,
         pattern=rep,
         permute_dst=rep.permute_dst,
+        red_seg_first=red_seg_first,
+        red_seg_len=red_seg_len,
+        red_Lmax=max(max((red.max_valid_seg_len for red in rank_reds),
+                         default=1), 1),
+        red_dup_free=all(red.duplicate_free for red in rank_reds),
     )

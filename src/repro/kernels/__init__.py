@@ -5,9 +5,11 @@ oracled in ref.py.  All validated in interpret mode on CPU; compiled by
 Mosaic on real TPUs.
 """
 
-from .ops import (default_interpret, flash_attention, sf_pack,
-                  sf_pack_strided, sf_unpack, spmv_ell)
+from .ops import (default_interpret, flash_attention, pack_rows,
+                  segment_reduce_rows, sf_pack, sf_pack_strided, sf_unpack,
+                  spmv_ell)
 from . import ref
 
-__all__ = ["default_interpret", "flash_attention", "sf_pack",
-           "sf_pack_strided", "sf_unpack", "spmv_ell", "ref"]
+__all__ = ["default_interpret", "flash_attention", "pack_rows",
+           "segment_reduce_rows", "sf_pack", "sf_pack_strided", "sf_unpack",
+           "spmv_ell", "ref"]

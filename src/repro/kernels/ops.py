@@ -19,12 +19,50 @@ from .spmv_ell import spmv_ell as _spmv_ell
 
 __all__ = [
     "default_interpret", "sf_pack", "sf_pack_strided", "sf_unpack",
+    "pack_rows", "segment_reduce_rows",
     "flash_attention", "spmv_ell", "ref",
 ]
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def pack_rows(data, idx, *, interpret=None):
+    """``data[idx]`` row gather via the pack kernel for arbitrary unit
+    shapes: flattens trailing dims to one row width, packs, restores the
+    shape.  Degenerate shapes (no rows, no index, zero-width unit) fall back
+    to ``jnp.take``.  Shared by the pallas backend and the DistSF general
+    path."""
+    data = jnp.asarray(data)
+    unit = data.shape[1:]
+    usize = int(np.prod(unit)) if unit else 1
+    idx_shape = tuple(jnp.shape(idx))
+    n_idx = int(np.prod(idx_shape)) if idx_shape else 1
+    if usize == 0 or n_idx == 0 or data.shape[0] == 0:
+        return jnp.take(data, jnp.asarray(idx), axis=0)
+    d2 = data.reshape(data.shape[0], usize)
+    out = sf_pack(d2, jnp.asarray(idx).reshape(-1), interpret=interpret)
+    return out.reshape(idx_shape + tuple(unit))
+
+
+def segment_reduce_rows(sorted_vals, seg_first, seg_len, *, num_segments,
+                        Lmax, op="sum", interpret=None):
+    """Kernel segment-reduce over a sorted row buffer of arbitrary unit
+    shape; pads ``Lmax`` rows so the last panel load stays in bounds (the
+    pad content is masked out by the per-segment length).  Shared by the
+    pallas backend and the DistSF general path."""
+    interpret = default_interpret() if interpret is None else interpret
+    sorted_vals = jnp.asarray(sorted_vals)
+    unit = sorted_vals.shape[1:]
+    usize = int(np.prod(unit)) if unit else 1
+    s2 = sorted_vals.reshape(sorted_vals.shape[0], usize)
+    pad = jnp.zeros((Lmax, usize), s2.dtype)
+    out = segment_reduce_sorted(
+        jnp.concatenate([s2, pad], axis=0), jnp.asarray(seg_first),
+        jnp.asarray(seg_len), num_segments=num_segments, Lmax=Lmax, op=op,
+        interpret=interpret)
+    return out.reshape((num_segments,) + tuple(unit))
 
 
 def sf_pack(data, idx, *, interpret=None):

@@ -63,7 +63,7 @@ def pack_strided(data: jnp.ndarray, *, start: int, dims, strides,
     Each grid step moves one contiguous (dx, U) row panel — face/pencil
     subdomains of a regular grid move as whole panels, the same win the
     paper's multi-strided packs get from fewer indirections.  The input
-    block uses an *element-offset* first dim (``pl.Element``) because panel
+    block uses element-offset indexing (``pl.unblocked``) because panel
     starts are not multiples of the panel height.
     """
     dx, dy, dz = (int(d) for d in dims)
@@ -74,8 +74,9 @@ def pack_strided(data: jnp.ndarray, *, start: int, dims, strides,
     return pl.pallas_call(
         _copy_kernel,
         grid=(dy, dz),
-        in_specs=[pl.BlockSpec((pl.Element(dx), U),
-                               lambda j, k: (start + j * sy + k * sz, 0))],
+        in_specs=[pl.BlockSpec((dx, U),
+                               lambda j, k: (start + j * sy + k * sz, 0),
+                               indexing_mode=pl.unblocked)],
         out_specs=pl.BlockSpec((dx, U), lambda j, k: (j + k * dy, 0)),
         out_shape=jax.ShapeDtypeStruct((dx * dy * dz, U), data.dtype),
         interpret=interpret,

@@ -100,8 +100,9 @@ def segment_reduce_sorted(buf: jnp.ndarray, seg_start: jnp.ndarray,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(num_segments,),
-            in_specs=[pl.BlockSpec((pl.Element(Lmax), U),
-                                   lambda s, meta_ref: (meta_ref[0, s], 0))],
+            in_specs=[pl.BlockSpec((Lmax, U),
+                                   lambda s, meta_ref: (meta_ref[0, s], 0),
+                                   indexing_mode=pl.unblocked)],
             out_specs=pl.BlockSpec((1, U), lambda s, meta_ref: (s, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((num_segments, U), buf.dtype),

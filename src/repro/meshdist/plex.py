@@ -27,7 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import SFOps, StarForest
+from ..core import SFComm, StarForest
 from .section import Section, apply_section
 
 __all__ = ["HexMesh", "DistributedMesh", "initial_distribution",
@@ -180,7 +180,7 @@ def distribute(dm: DistributedMesh,
     if target_owner is None:
         target_owner = _partition_balanced(mesh, R)
     sf = migration_sf(dm, target_owner)
-    ops = SFOps(sf)
+    ops = SFComm(sf)
     t1 = time.perf_counter()
 
     def migrate(per_rank_arrays, unit_cols: int, dtype):
@@ -252,7 +252,7 @@ def global_to_local(vsf: StarForest, dof_per_vertex: int,
                                                 dof_per_vertex, np.int64))
                      for r in range(vsf.nranks)]
     dof_sf = apply_section(vsf, sections, leaf_sections)
-    ops = SFOps(dof_sf)
+    ops = SFComm(dof_sf)
     out = ops.bcast(jnp.asarray(global_vec),
                     jnp.asarray(global_vec.copy()), "replace")
     return np.asarray(out)
@@ -269,7 +269,7 @@ def local_to_global(vsf: StarForest, dof_per_vertex: int,
                                                 dof_per_vertex, np.int64))
                      for r in range(vsf.nranks)]
     dof_sf = apply_section(vsf, sections, leaf_sections)
-    ops = SFOps(dof_sf)
+    ops = SFComm(dof_sf)
     out = ops.reduce(jnp.asarray(local_vec), jnp.asarray(local_vec.copy()),
                      "sum")
     return np.asarray(out)

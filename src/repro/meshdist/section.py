@@ -16,7 +16,7 @@ from typing import List, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import SFOps, StarForest
+from ..core import SFComm, StarForest
 
 __all__ = ["Section", "apply_section"]
 
@@ -50,12 +50,12 @@ def apply_section(point_sf: StarForest, root_sections: List[Section],
     each leaf point's dof offsets (ghost updates into existing layouts).
 
     The root dof *sizes* must first be made known at the leaves; PETSc does
-    this with an SFBcast of the section — we do the same through SFOps.
+    this with an SFBcast of the section — we do the same through SFComm.
     """
     point_sf.setup()
     R = point_sf.nranks
     # 1) bcast root sizes and offsets to leaves (the PetscSection bcast)
-    ops = SFOps(point_sf)
+    ops = SFComm(point_sf)
     root_sizes = np.concatenate([s.sizes for s in root_sections]) \
         if root_sections else np.zeros(0, np.int64)
     root_offs = np.concatenate([s.offsets[:-1] for s in root_sections]) \

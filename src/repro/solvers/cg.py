@@ -31,7 +31,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CGResult", "cg", "cg_async"]
+__all__ = ["CGResult", "cg", "cg_async", "as_matvec"]
+
+
+def as_matvec(op) -> Callable:
+    """Accept either a raw matvec callable or an SF-backed operator (e.g.
+    :class:`repro.sparse.parmat.ParCSR`) whose ``spmv`` routes its ghost
+    exchange through the :class:`repro.core.SFComm` backend layer."""
+    if hasattr(op, "spmv"):
+        return op.spmv
+    if callable(op):
+        return op
+    raise TypeError(f"need a callable or an object with .spmv, got {op!r}")
 
 
 @dataclasses.dataclass
@@ -57,7 +68,9 @@ def _step(matvec, x, r, p, rz):
 def cg(matvec: Callable, b: jnp.ndarray, x0: Optional[jnp.ndarray] = None,
        *, tol: float = 1e-8, maxiter: int = 500) -> CGResult:
     """Host-stepped CG: one jitted iteration per host turn + host-side
-    convergence check (the paper's blocking baseline)."""
+    convergence check (the paper's blocking baseline).  ``matvec`` may be a
+    callable or an SF-backed operator accepted by :func:`as_matvec`."""
+    matvec = as_matvec(matvec)
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)
     p = r
@@ -85,6 +98,7 @@ def cg_async(matvec: Callable, b: jnp.ndarray,
     Convergence is checked on device every ``check_every`` iterations (the
     paper's CGAsync checks never and runs to maxiter; pass
     ``check_every=0`` for that exact behaviour)."""
+    matvec = as_matvec(matvec)
     x = jnp.zeros_like(b) if x0 is None else x0
 
     def run(x, b):

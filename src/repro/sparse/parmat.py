@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import SFOps, StarForest, ragged_offsets
+from ..core import SFComm, StarForest, ragged_offsets
 from ..kernels import ops as kops
 from ..meshdist.section import Section, apply_section
 from .csr import LocalCSR, csr_from_coo, csr_transpose, spgemm
@@ -82,7 +82,7 @@ class ParCSR:
             sf.set_graph(r, ncols_local, None, remote,
                          nleafspace=max(int(g.size), 1))
         self.sf = sf.setup()
-        self.sfops = SFOps(self.sf)
+        self.comm = SFComm(self.sf)
         self.lvec_offsets = ragged_offsets(
             [self.sf.graph(r).nleafspace for r in range(nranks)])
 
@@ -152,7 +152,7 @@ class ParCSR:
             PetscSFBcastEnd(sf, x, lvec, MPI_REPLACE);
             y += B*lvec;
         """
-        pend = self.sfops.bcast_begin(x, "replace")
+        pend = self.comm.bcast_begin(x, "replace")
         y_parts = []
         for r in range(self.nranks):
             c0, c1 = int(self.col_offsets[r]), int(self.col_offsets[r + 1])
@@ -182,7 +182,7 @@ class ParCSR:
                 lp = jnp.zeros((nls,), y.dtype).at[: lp.shape[0]].set(lp)
             lvec_parts.append(lp[:nls])
         lvec = jnp.concatenate(lvec_parts)
-        return self.sfops.reduce(lvec, y, "sum")
+        return self.comm.reduce(lvec, y, "sum")
 
     # ------------------------------------------------- ghost-row fetching
     def _row_sf(self, wanted: List[np.ndarray],
@@ -221,7 +221,7 @@ class ParCSR:
             merged.append(csr_from_coo(m, self.shape[1], rows, cols, vals))
         sections = [Section.from_sizes(np.diff(merged[r].indptr)) for r in range(R)]
         dof_sf = apply_section(row_sf, sections)
-        dops = SFOps(dof_sf)
+        dops = SFComm(dof_sf)
         root_cols = np.concatenate([m.indices for m in merged]) \
             if sum(m.nnz for m in merged) else np.zeros(0, np.int64)
         root_vals = np.concatenate([m.data for m in merged]) \
@@ -233,7 +233,7 @@ class ParCSR:
             jnp.asarray(root_vals.astype(np.float32)),
             jnp.zeros(nls, jnp.float32), "replace"))
         # also bcast row sizes over the row SF to rebuild indptrs
-        pops = SFOps(row_sf)
+        pops = SFComm(row_sf)
         root_sizes = np.concatenate([s.sizes for s in sections])
         lsizes = np.asarray(pops.bcast(root_sizes,
                                        np.zeros(row_sf.nleafspace_total, np.int64),
@@ -364,7 +364,7 @@ def assemble_coo(nranks: int, m: int, n: int,
             else np.zeros((0, 2), np.int64)
         csf.set_graph(q, 1, None, remote, nleafspace=max(t.size, 1))
     csf.setup()
-    cops = SFOps(csf)
+    cops = SFComm(csf)
     root0 = jnp.zeros((nranks,), jnp.int32)
     ones = jnp.ones((csf.nleafspace_total,), jnp.int32)
     totals, slots = cops.fetch_and_op(root0, ones, "sum")
@@ -381,7 +381,7 @@ def assemble_coo(nranks: int, m: int, n: int,
         ssf.set_graph(q, int(totals[q]), None, remote,
                       nleafspace=max(t.size, 1))
     ssf.setup()
-    sops = SFOps(ssf)
+    sops = SFComm(ssf)
     nstage = ssf.nroots_total
 
     def route(vals, dt):

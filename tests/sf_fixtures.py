@@ -1,0 +1,84 @@
+"""Shared star-forest fixtures for the per-backend conformance suite.
+
+Each builder returns a set-up StarForest exercising one communication
+pattern from paper §5.2's pattern taxonomy.  The same fixtures drive the
+in-process (global/pallas) conformance tests in ``test_backends.py`` and the
+subprocess shard_map run, so every registered backend is checked against the
+numpy oracle on identical graphs.
+"""
+
+import numpy as np
+
+from conftest import random_star_forest
+
+
+def general_sf(nranks=4, seed=0):
+    """Random SF: duplicates, holes, self edges — the general a2a path."""
+    return random_star_forest(nranks=nranks, seed=seed)
+
+
+def allgather_sf(nranks=4, roots_per_rank=2):
+    """Every rank's leaves are all roots in rank order (lax.all_gather)."""
+    from repro.core import StarForest
+    sf = StarForest(nranks)
+    nroots = [roots_per_rank] * nranks
+    ro = np.concatenate([[0], np.cumsum(nroots)])
+    total = int(ro[-1])
+    for q in range(nranks):
+        rr = np.searchsorted(ro, np.arange(total), side="right") - 1
+        off = np.arange(total) - ro[rr]
+        sf.set_graph(q, nroots[q], None, np.stack([rr, off], 1),
+                     nleafspace=total)
+    return sf.setup()
+
+
+def permute_sf(nranks=4, block=3):
+    """Each rank's roots go wholesale to rank (r+1) % R (lax.ppermute)."""
+    from repro.core import StarForest
+    sf = StarForest(nranks)
+    for q in range(nranks):
+        src = (q - 1) % nranks
+        remote = np.stack([np.full(block, src, np.int64),
+                           np.arange(block, dtype=np.int64)], 1)
+        sf.set_graph(q, block, None, remote, nleafspace=block)
+    return sf.setup()
+
+
+def local_only_sf(nranks=2, n=4):
+    """All edges are self edges: pure on-device scatter, no collective."""
+    from repro.core import StarForest
+    sf = StarForest(nranks)
+    for q in range(nranks):
+        remote = np.stack([np.full(n, q, np.int64),
+                           np.arange(n, dtype=np.int64)[::-1].copy()], 1)
+        sf.set_graph(q, n, None, remote, nleafspace=n)
+    return sf.setup()
+
+
+def strided_sf(dims=(2, 2, 2), grid=(4, 3, 3), start=1):
+    """Single pair whose pack index list enumerates a 3D subdomain
+    (paper §5.2 ¶3) — engages the parametric strided pack kernel."""
+    from repro.core import StarForest
+    dx, dy, dz = dims
+    X, Y, _Z = grid
+    i = np.arange(dx)[None, None, :]
+    j = np.arange(dy)[None, :, None] * X
+    k = np.arange(dz)[:, None, None] * (X * Y)
+    offs = (start + (i + j + k)).reshape(-1)
+    nroots = int(offs.max()) + 1
+    sf = StarForest(2)
+    sf.set_graph(0, nroots, None, np.zeros((0, 2), np.int64), nleafspace=1)
+    sf.set_graph(1, 0, None,
+                 np.stack([np.zeros(offs.size, np.int64), offs], 1),
+                 nleafspace=offs.size)
+    return sf.setup()
+
+
+FIXTURES = {
+    "general0": lambda: general_sf(seed=0),
+    "general1": lambda: general_sf(seed=1),
+    "allgather": allgather_sf,
+    "permute": permute_sf,
+    "local_only": local_only_sf,
+    "strided": strided_sf,
+}

@@ -62,7 +62,8 @@ def test_unpack_sweep(op, M, U, S, rng):
             want[seg_dst[s]] = np.minimum(want[seg_dst[s]], red[s])
         else:
             want[seg_dst[s]] *= red[s]
-    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+    # atol: kernel panel reductions re-associate float sums vs the oracle
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("Sq,Skv,H,Hkv,D,causal,window", [

@@ -24,8 +24,7 @@ SCRIPT = textwrap.dedent("""
     from repro.core import DistSF, simulate
     from repro.core import patterns as pat
 
-    mesh = jax.make_mesh((8,), ("sf",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((8,), ("sf",))
     rng = np.random.default_rng(0)
     for seed in range(5):
         sf = random_star_forest(nranks=8, seed=seed)
