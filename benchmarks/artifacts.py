@@ -1,0 +1,13 @@
+"""Where benchmark trajectory artifacts (``BENCH_*.json``) land.
+
+One definition of the artifact directory (the repo root, where CI picks
+them up) shared by every bench module.
+"""
+
+import os
+
+
+def artifact_path(name: str) -> str:
+    """Absolute path of a ``BENCH_*.json`` artifact at the repo root."""
+    return os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), name)

@@ -1,0 +1,101 @@
+"""DMDA-style structured-grid halo exchange: unit size × backend sweep.
+
+The paper's §2 workloads (DMDA ghost exchange, VecScatter, MatMult halos)
+move dof *blocks*, and "Toward performance-portable PETSc" (arXiv:2011.00715)
+shows small per-field messages waste launch/latency budget — the fix is to
+widen the unit and fuse exchanges.  This benchmark measures exactly that on
+a periodic 2-D DMDA built with ``interior="skip"`` (the SF carries pure halo
+traffic):
+
+  * ``unit sweep``     — one ghost bcast of ``(n, u)`` payloads for growing
+    unit width u: per-row cost should *fall* as u grows (fixed per-row
+    launch/index overhead amortizes over more lanes).
+  * ``fused vs seq``   — k scalar fields through ONE FieldBundle exchange
+    versus k sequential scalar bcasts, per backend.  Fused wins once the
+    per-exchange overhead dominates (k >= ~4 on the kernel path).
+
+Results land in ``BENCH_halo.json`` (same name→µs schema as
+``BENCH_pingpong.json``) so the perf trajectory accumulates across PRs.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SFComm
+from repro.meshdist.dmda import DMDA
+
+from benchmarks.artifacts import artifact_path
+
+DEFAULT_JSON = artifact_path("BENCH_halo.json")
+
+
+def _time(fn, iters=20, trials=3):
+    """Best-of-``trials`` mean µs/call (interpret-mode timings are noisy:
+    a stray GC or late recompile in one trial would distort a single mean)."""
+    jax.block_until_ready(fn())  # compile + warmup
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def run(grid=(32, 32), nranks=4, units=(1, 2, 4, 8, 16),
+        fuse_ks=(1, 2, 4, 8), backends=("global", "pallas"),
+        json_path=DEFAULT_JSON):
+    da = DMDA(grid, nranks, stencil="star", width=1, periodic=True,
+              interior="skip")
+    n = da.nglobal
+    nl = da.nlocal_total
+    rng = np.random.default_rng(0)
+    rows = []
+    report = {"bench": "halo", "unit": "us_per_call",
+              "grid": list(grid), "nranks": nranks,
+              "halo_edges": int(da.sf.nedges_total),
+              "backends": {bk: {"unit_us": {}, "fused_us": {}, "seq_us": {}}
+                           for bk in backends}}
+
+    for bk in backends:
+        comm = da.comm(backend=bk)
+        # ---- unit-size sweep: one bcast of (n, u) ----------------------
+        for u in units:
+            g = jnp.asarray(rng.standard_normal((n, u)).astype(np.float32))
+            l = jnp.zeros((nl, u), jnp.float32)
+            fn = jax.jit(lambda g, l, comm=comm: comm.bcast(g, l, "replace"))
+            us = _time(lambda: fn(g, l))
+            report["backends"][bk]["unit_us"][str(u)] = us
+            rows.append((f"halo_{bk}_unit{u}", us,
+                         f"us_per_lane={us / u:.2f}"))
+        # ---- fused multi-field vs k sequential scalar exchanges --------
+        for k in fuse_ks:
+            gs = [jnp.asarray(rng.standard_normal(n).astype(np.float32))
+                  for _ in range(k)]
+            ls = [jnp.zeros((nl,), jnp.float32) for _ in range(k)]
+            bundle = comm._bundle(gs)
+            assert bundle.ngroups("replace") == 1
+
+            # payloads must be traced jit *arguments*: a zero-arg closure
+            # would constant-fold the pack gather out of the compiled HLO
+            # and time only dispatch + scatter
+            fused_j = jax.jit(lambda gs, ls, bundle=bundle:
+                              bundle.bcast_multi(gs, ls, "replace"))
+            seq_j = jax.jit(lambda gs, ls, comm=comm:
+                            [comm.bcast(g, l, "replace")
+                             for g, l in zip(gs, ls)])
+            us_f = _time(lambda: fused_j(gs, ls))
+            us_s = _time(lambda: seq_j(gs, ls))
+            report["backends"][bk]["fused_us"][str(k)] = us_f
+            report["backends"][bk]["seq_us"][str(k)] = us_s
+            rows.append((f"halo_{bk}_fused_k{k}", us_f,
+                         f"seq={us_s:.1f}us speedup={us_s / us_f:.2f}x"))
+    if json_path:   # pass json_path=None to skip the trajectory artifact
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+    return rows

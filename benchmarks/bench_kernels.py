@@ -1,6 +1,9 @@
 """Pallas kernel interpret-mode sanity timings vs jnp reference (not a paper
-table; regression tracking for the kernel layer)."""
+table; regression tracking for the kernel layer).  Timings are written to
+``BENCH_kernels.json`` (same name→µs schema as ``BENCH_pingpong.json``) so
+the kernel-layer trajectory accumulates across PRs like the backend one."""
 
+import json
 import time
 
 import jax
@@ -9,6 +12,10 @@ import numpy as np
 
 from repro.kernels import ops as K
 from repro.kernels import ref as R
+
+from benchmarks.artifacts import artifact_path
+
+DEFAULT_JSON = artifact_path("BENCH_kernels.json")
 
 
 def _t(fn, *a, iters=10):
@@ -21,7 +28,7 @@ def _t(fn, *a, iters=10):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
+def run(json_path=DEFAULT_JSON):
     rng = np.random.default_rng(0)
     rows = []
     data = jnp.asarray(rng.standard_normal((4096, 128)).astype(np.float32))
@@ -63,4 +70,10 @@ def run():
     rows.append(("flash_ref_256",
                  _t(lambda a, b, c: R.flash_attention_ref(a, b, c), q, k, v),
                  ""))
+    if json_path:   # pass json_path=None to skip the trajectory artifact
+        report = {"bench": "kernels", "unit": "us_per_call",
+                  "timings": {name: us for name, us, _ in rows},
+                  "derived": {name: note for name, _, note in rows if note}}
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
     return rows

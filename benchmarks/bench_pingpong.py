@@ -14,7 +14,6 @@ strided pack kernel (§5.2 ¶3) and the duplicate-free reduce fast path.
 """
 
 import json
-import os
 import time
 
 import jax
@@ -23,8 +22,9 @@ import numpy as np
 
 from repro.core import SFComm, StarForest
 
-DEFAULT_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_pingpong.json")
+from benchmarks.artifacts import artifact_path
+
+DEFAULT_JSON = artifact_path("BENCH_pingpong.json")
 
 
 def _time(fn, iters=50):

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV.  Table/figure map:
   Table 1  -> bench_pingpong      Fig 5/9 -> bench_async
   Fig 10   -> bench_cg            Fig 11  -> bench_meshdist
   Fig 12   -> bench_spmm          (extra) -> bench_kernels
+  §2 DMDA halo / unit sweep -> bench_halo
 Roofline tables are produced by ``python -m repro.launch.roofline`` from the
 dry-run reports.
 """
@@ -15,9 +16,10 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: pingpong,async,cg,meshdist,spmm,kernels")
+                    help="comma list: "
+                         "pingpong,async,cg,meshdist,spmm,kernels,halo")
     args = ap.parse_args()
-    from benchmarks import (bench_async, bench_cg, bench_kernels,
+    from benchmarks import (bench_async, bench_cg, bench_halo, bench_kernels,
                             bench_meshdist, bench_pingpong, bench_spmm)
     suites = {
         "pingpong": bench_pingpong.run,
@@ -26,6 +28,7 @@ def main() -> None:
         "meshdist": bench_meshdist.run,
         "spmm": bench_spmm.run,
         "kernels": bench_kernels.run,
+        "halo": bench_halo.run,
     }
     wanted = list(suites) if args.only == "all" else args.only.split(",")
     print("name,us_per_call,derived")

@@ -51,6 +51,16 @@ li = jnp.ones(sf.nleafspace_total, jnp.int32)
 root_out, slots = ops.fetch_and_op(ri, li, "sum")
 print("fetch_and_add slots:", slots, " totals:", root_out)
 
+# --- fused multi-field exchange (VecScatter analogue, core/fields.py) -------
+coords = jnp.reshape(jnp.arange(3.0 * sf.nroots_total), (sf.nroots_total, 3))
+labels = jnp.arange(sf.nroots_total, dtype=jnp.int32)
+lc = jnp.zeros((sf.nleafspace_total, 3), jnp.float32)
+ll = jnp.zeros(sf.nleafspace_total, jnp.int32)
+oc, ol = ops.bcast_multi([coords, labels], [lc, ll], "replace")
+print("\nbcast_multi (f32 coords + i32 labels, ONE fused exchange):")
+print("  coords ->", np.asarray(oc)[:3].tolist(), "...")
+print("  labels ->", ol)
+
 # --- multi-SF + gather/scatter ----------------------------------------------
 multi = make_multi_sf(sf)
 print("\nmulti-SF:", multi)

@@ -6,6 +6,10 @@ Public API:
   SFComm                     user-facing facade over the backend registry
   select_backend, register_backend, available_backends
                              §4–§5 implementation selection (-sf_backend)
+  UnitSpec                   §3.2 MPI_Datatype unit: payload rows are
+                             (n, *unit) dof blocks on every path
+  FieldBundle                fused multi-field exchange (VecScatter
+                             analogue); SFComm.bcast_multi/reduce_multi
   SFOps                      jit/grad-friendly ops on global arrays
   DistSF                     shard_map lowering to jax.lax collectives
   compose, compose_inverse, embed_roots, embed_leaves, make_multi_sf
@@ -15,7 +19,9 @@ Public API:
 
 from .graph import RankGraph, StarForest, ragged_offsets
 from .mpiops import Op, get_op
+from .unit import UnitSpec, resolve_unit
 from .ops import PendingComm, SFOps
+from .fields import FieldBundle, FieldSpec
 from .plan import GlobalPlan, PaddedPlan, build_global_plan, build_padded_plan
 from .redplan import ReductionPlan, build_reduction_plan
 from .compose import (compose, compose_inverse, embed_leaves, embed_roots,
@@ -29,6 +35,8 @@ from . import patterns, redplan, simulate
 __all__ = [
     "RankGraph", "StarForest", "ragged_offsets",
     "Op", "get_op",
+    "UnitSpec", "resolve_unit",
+    "FieldBundle", "FieldSpec",
     "PendingComm", "SFOps",
     "GlobalPlan", "PaddedPlan", "build_global_plan", "build_padded_plan",
     "ReductionPlan", "build_reduction_plan",

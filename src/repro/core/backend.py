@@ -46,6 +46,7 @@ from .graph import StarForest
 from .mpiops import Op, get_op
 from .ops import PendingComm, SFOps, _apply_unique
 from .plan import GlobalPlan, build_global_plan
+from .unit import check_plan_unit
 from .distributed import DistSF
 from . import patterns as pat
 from ..kernels import ops as kops
@@ -167,10 +168,14 @@ class PallasBackend:
     name = "pallas"
 
     def __init__(self, sf: StarForest, plan: Optional[GlobalPlan] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, unit=None):
         sf.setup()
         self.sf = sf
-        self.plan = plan or build_global_plan(sf)
+        if plan is not None:
+            check_plan_unit(plan, unit)
+            self.plan = plan
+        else:
+            self.plan = build_global_plan(sf, unit=unit)
         self.interpret = kops.default_interpret() if interpret is None \
             else bool(interpret)
         p, red = self.plan, self.plan.red
@@ -183,11 +188,16 @@ class PallasBackend:
         self._reduce_strided = pat.detect_strided(self._gl_sorted) \
             if p.nedges else None
 
+    @property
+    def unit(self):
+        return self.plan.unit
+
     # ------------------------------------------------------------ plumbing
     def _pack(self, data: jnp.ndarray, idx: np.ndarray,
               strided: Optional[pat.Strided3D] = None) -> jnp.ndarray:
         """rows ``data[idx]`` via the pack kernel (strided variant when the
-        enumeration is parametric)."""
+        enumeration is parametric).  Both kernels block over the full
+        ``(*unit)`` row shape, so payloads pass through unreshaped."""
         if strided is None:
             return kops.pack_rows(data, idx, interpret=self.interpret)
         data = jnp.asarray(data)
@@ -196,11 +206,12 @@ class PallasBackend:
         M = int(np.size(idx))
         if M == 0 or usize == 0 or data.shape[0] == 0:
             return jnp.take(data, jnp.asarray(idx), axis=0)
-        out = kops.sf_pack_strided(data.reshape(data.shape[0], usize),
+        scalar_rows = data.ndim == 1
+        out = kops.sf_pack_strided(data[:, None] if scalar_rows else data,
                                    start=strided.start, dims=strided.dims,
                                    strides=strided.strides,
                                    interpret=self.interpret)
-        return out.reshape((M,) + tuple(unit))
+        return out[:, 0] if scalar_rows else out
 
     def _segment_reduce(self, sorted_vals: jnp.ndarray, opname: str
                         ) -> jnp.ndarray:
@@ -213,6 +224,8 @@ class PallasBackend:
     # ------------------------------------------------------------- bcast
     def bcast_begin(self, rootdata: jnp.ndarray, op="replace") -> PendingComm:
         op = get_op(op)
+        rootdata = jnp.asarray(rootdata)
+        self.plan.unit.check(rootdata, "rootdata")
         vals = self._pack(rootdata, self.plan.gr, self._bcast_strided)
         return PendingComm("bcast", vals, op, self)
 
@@ -231,6 +244,8 @@ class PallasBackend:
         """Pack leaf values directly in sorted slot order (the pack and the
         determinism sort are one gather)."""
         op = get_op(op)
+        leafdata = jnp.asarray(leafdata)
+        self.plan.unit.check(leafdata, "leafdata")
         vals = self._pack(leafdata, self._gl_sorted, self._reduce_strided)
         return PendingComm("reduce", vals, op, self)
 
@@ -349,12 +364,12 @@ class ShardmapBackend:
 
     def __init__(self, sf: StarForest, mesh=None, axis_name: str = "sf",
                  lowering: str = "auto", sync_mode: bool = False,
-                 use_kernels: Optional[bool] = None, plan=None):
+                 use_kernels: Optional[bool] = None, plan=None, unit=None):
         sf.setup()
         self.sf = sf
         self.dist = DistSF(sf, axis_name=axis_name, plan=plan,
                            lowering=lowering, sync_mode=sync_mode,
-                           use_kernels=use_kernels)
+                           use_kernels=use_kernels, unit=unit)
         if mesh is None:
             devs = jax.devices()
             if len(devs) < sf.nranks:
@@ -371,6 +386,10 @@ class ShardmapBackend:
         self.mesh = mesh
         self._fns: Dict[Tuple[str, str], Callable] = {}
         self._globalops: Optional[GlobalBackend] = None
+
+    @property
+    def unit(self):
+        return self.dist.unit
 
     # ------------------------------------------------------------ plumbing
     def _fn(self, kind: str, opname: str) -> Callable:
@@ -462,19 +481,32 @@ class SFComm:
     every operation), then communicate.  The backend is chosen by
     ``select_backend`` unless named explicitly — exactly the paper's
     ``-sf_backend`` override.
+
+    Payload rows are ``(*unit)`` dof blocks (paper §3.2's ``MPI_Datatype
+    unit``); pass ``unit=`` to pin and validate the unit shape/dtype.  To
+    move *several* same-pattern fields in one exchange (the VecScatter
+    fusion), use :meth:`bcast_multi` / :meth:`reduce_multi`, which route
+    through a cached :class:`repro.core.fields.FieldBundle`.
     """
 
     def __init__(self, sf: StarForest, backend: Optional[str] = None, *,
-                 mesh=None, **backend_kwargs):
+                 mesh=None, unit=None, **backend_kwargs):
         sf.setup()
         self.sf = sf
         name = backend if backend is not None \
             else select_backend(sf, mesh=mesh)
-        self.backend = make_backend(name, sf, mesh=mesh, **backend_kwargs)
+        self.backend = make_backend(name, sf, mesh=mesh, unit=unit,
+                                    **backend_kwargs)
+        self._bundles: Dict[Any, Any] = {}
 
     @property
     def backend_name(self) -> str:
         return self.backend.name
+
+    @property
+    def unit(self):
+        """The backend plan's payload unit spec."""
+        return self.backend.unit
 
     # delegation ----------------------------------------------------------
     def bcast_begin(self, rootdata, op="replace"):
@@ -498,6 +530,28 @@ class SFComm:
     def fetch_and_op(self, rootdata, leafdata, op="sum"):
         return self.backend.fetch_and_op(rootdata, leafdata, op)
 
+    # fused multi-field exchange (VecScatter analogue) -------------------
+    def _bundle(self, fields):
+        from .fields import FieldBundle
+        key = tuple((tuple(int(d) for d in f.shape[1:]),
+                     np.dtype(f.dtype).str) for f in fields)
+        if key not in self._bundles:
+            self._bundles[key] = FieldBundle.for_data(self, fields)
+        return self._bundles[key]
+
+    def bcast_multi(self, rootfields, leaffields, op="replace"):
+        """Broadcast k same-pattern fields through ONE fused exchange per
+        byte-compatible group (see :class:`repro.core.fields.FieldBundle`).
+        Returns the list of updated leaf fields."""
+        return self._bundle(rootfields).bcast_multi(rootfields, leaffields,
+                                                    op)
+
+    def reduce_multi(self, leaffields, rootfields, op="sum"):
+        """Reduce k same-pattern fields through ONE fused exchange per
+        fusable group.  Returns the list of updated root fields."""
+        return self._bundle(leaffields).reduce_multi(leaffields, rootfields,
+                                                     op)
+
     def gather(self, leafdata):
         return self.backend.gather(leafdata)
 
@@ -514,16 +568,16 @@ class SFComm:
 # --------------------------------------------------------------------------
 # built-in registrations
 # --------------------------------------------------------------------------
-def _global_factory(sf, mesh=None, plan=None):
-    return GlobalBackend(sf, plan=plan)
+def _global_factory(sf, mesh=None, plan=None, unit=None):
+    return GlobalBackend(sf, plan=plan, unit=unit)
 
 
 def _shardmap_factory(sf, mesh=None, **kw):
     return ShardmapBackend(sf, mesh=mesh, **kw)
 
 
-def _pallas_factory(sf, mesh=None, plan=None, interpret=None):
-    return PallasBackend(sf, plan=plan, interpret=interpret)
+def _pallas_factory(sf, mesh=None, plan=None, interpret=None, unit=None):
+    return PallasBackend(sf, plan=plan, interpret=interpret, unit=unit)
 
 
 register_backend("global", _global_factory)

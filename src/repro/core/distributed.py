@@ -49,6 +49,7 @@ except ImportError:  # pragma: no cover - version-dependent
 from .graph import StarForest
 from .mpiops import Op, get_op
 from .plan import PaddedPlan, build_padded_plan
+from .unit import check_plan_unit
 from . import patterns as pat
 from ..kernels import ops as kops
 
@@ -101,11 +102,16 @@ class DistSF:
 
     def __init__(self, sf: StarForest, axis_name: str = "sf",
                  plan: Optional[PaddedPlan] = None, lowering: str = "auto",
-                 sync_mode: bool = False, use_kernels: Optional[bool] = None):
+                 sync_mode: bool = False, use_kernels: Optional[bool] = None,
+                 unit=None):
         sf.setup()
         self.sf = sf
         self.axis = axis_name
-        self.plan = plan or build_padded_plan(sf)
+        if plan is not None:
+            check_plan_unit(plan, unit)
+            self.plan = plan
+        else:
+            self.plan = build_padded_plan(sf, unit=unit)
         kind = self.plan.pattern.kind
         if lowering == "auto":
             self.lowering = kind
@@ -126,6 +132,11 @@ class DistSF:
     @property
     def nranks(self) -> int:
         return self.plan.nranks
+
+    @property
+    def unit(self):
+        """The plan's payload unit spec (paper §3.2 ``MPI_Datatype``)."""
+        return self.plan.unit
 
     def _me(self):
         return lax.axis_index(self.axis)
@@ -161,6 +172,7 @@ class DistSF:
     def bcast_begin(self, root_shard: jnp.ndarray, op="replace") -> DistPending:
         op = get_op(op)
         p = self.plan
+        p.unit.check(root_shard, "root shard")
         me = self._me()
         self_vals = jnp.take(root_shard, _take_row(p.self_root_idx, me), axis=0)
         if self.lowering == pat.LOCAL_ONLY or self.lowering == pat.EMPTY:
@@ -216,6 +228,7 @@ class DistSF:
     def reduce_begin(self, leaf_shard: jnp.ndarray, op="sum") -> DistPending:
         op = get_op(op)
         p = self.plan
+        p.unit.check(leaf_shard, "leaf shard")
         me = self._me()
         self_vals = jnp.take(leaf_shard, _take_row(p.self_leaf_idx, me), axis=0)
         if self.lowering in (pat.LOCAL_ONLY, pat.EMPTY):

@@ -1,0 +1,245 @@
+"""Fused multi-field exchange — the VecScatter analogue on star forests.
+
+Paper §2 lists the workloads stacked on SF: DMDA ghost exchange, VecScatter
+and MatMult halos.  All of them move *several* fields over the *same*
+communication pattern — coordinates plus labels in mesh migration, k RHS
+columns in multi-vector SpMV, velocity/pressure/temperature in a staggered
+solver.  Issuing one SF op per field wastes launch and latency budget (the
+observation of "Toward performance-portable PETSc", arXiv:2011.00715: widen
+the unit, fuse the exchanges).
+
+:class:`FieldBundle` is the fusion plan: given k same-length fields, it
+groups them at setup time into *byte-compatible groups* and at run time
+moves each group through **one** pack → exchange → unpack on any registered
+backend, by widening the row unit to the group's concatenated width.
+
+Grouping rules (per reduction op):
+
+* ``replace`` moves bits, not numbers — fields whose dtypes share a
+  1/2/4-byte itemsize fuse into one group; mixed dtypes ride bitcast to the
+  common unsigned integer carrier of that width (exact round trip, NaNs
+  included).  8-byte dtypes group by exact dtype instead: this stack runs
+  with jax x64 disabled, so a u64 carrier does not exist (jnp weakens
+  f64/i64 payloads to 4 bytes before they ever reach a bundle anyway).
+* arithmetic ops (``sum``/``prod``/``max``/``min``/…) must compute in the
+  payload dtype, so fields fuse only with an *exactly* matching dtype.
+
+The per-call fused transform is a trailing-axis concat of ``(n, u_i)``
+views; the SF sees a single ``(n, U)`` payload, so every backend's pack
+kernel, collective, and unpack scatter runs exactly once per group.
+``SFComm.bcast_multi`` / ``reduce_multi`` construct and cache bundles
+automatically.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .mpiops import get_op
+from .unit import UnitSpec
+
+__all__ = ["FieldSpec", "FieldBundle"]
+
+# bitcast carrier per itemsize for mixed-dtype REPLACE groups
+_CARRIER = {1: np.dtype(np.uint8), 2: np.dtype(np.uint16),
+            4: np.dtype(np.uint32)}
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec(UnitSpec):
+    """One field's unit: a fully *pinned* :class:`UnitSpec` (both the
+    trailing row shape and the dtype are required)."""
+
+    def __post_init__(self):
+        if self.shape is None or self.dtype is None:
+            raise ValueError("FieldSpec pins both shape and dtype")
+        super().__post_init__()
+
+    @property
+    def unit(self) -> UnitSpec:
+        return self
+
+    @staticmethod
+    def of(data) -> "FieldSpec":
+        return FieldSpec(tuple(int(d) for d in data.shape[1:]), data.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Group:
+    """One fused exchange: member field ids + the carrier layout."""
+
+    members: Tuple[int, ...]       # field indices, in user order
+    widths: Tuple[int, ...]        # flat unit width per member
+    offsets: Tuple[int, ...]       # exclusive column offsets in the carrier
+    carrier: Any                   # np.dtype the fused payload travels as
+    bitcast: bool                  # members need a view change to carrier
+
+    @property
+    def width(self) -> int:
+        return self.offsets[-1]
+
+
+def _plan_groups(specs: Sequence[FieldSpec], by_bytes: bool) -> List[_Group]:
+    """Partition fields into fusable groups, preserving user order within
+    each group.  ``by_bytes`` groups on itemsize (REPLACE semantics),
+    otherwise on exact dtype."""
+    buckets: dict = {}
+    for i, sp in enumerate(specs):
+        # bool is excluded from the bitcast buckets: lax.bitcast_convert_type
+        # rejects bool operands, so bool fields fuse by exact dtype only
+        if by_bytes and sp.dtype.kind != "b" \
+                and sp.dtype.itemsize in _CARRIER:
+            key = ("b", sp.dtype.itemsize)
+        else:
+            key = ("d", sp.dtype.str)
+        buckets.setdefault(key, []).append(i)
+    groups = []
+    for key, members in buckets.items():
+        widths = tuple(specs[i].size for i in members)
+        offsets = (0,) + tuple(np.cumsum(widths).tolist())
+        dtypes = {specs[i].dtype.str for i in members}
+        if len(dtypes) == 1:
+            carrier, bitcast = specs[members[0]].dtype, False
+        else:
+            carrier, bitcast = _CARRIER[key[1]], True
+        groups.append(_Group(tuple(members), widths, offsets, carrier,
+                             bitcast))
+    return groups
+
+
+def _to_carrier(x: jnp.ndarray, n: int, width: int, carrier,
+                bitcast: bool) -> jnp.ndarray:
+    """(n, *unit) -> (n, width) columns in the group's carrier dtype."""
+    x = jnp.asarray(x).reshape(n, width)
+    if bitcast and x.dtype != carrier:
+        x = jax.lax.bitcast_convert_type(x, carrier)
+    return x
+
+
+def _from_carrier(cols: jnp.ndarray, spec: FieldSpec, n: int,
+                  bitcast: bool) -> jnp.ndarray:
+    if bitcast and cols.dtype != spec.dtype:
+        cols = jax.lax.bitcast_convert_type(cols, spec.dtype)
+    return cols.reshape((n,) + spec.shape)
+
+
+class FieldBundle:
+    """Fusion plan for k same-pattern, same-length field exchanges.
+
+    Built once per field-list signature (``SFComm`` caches bundles); each
+    ``bcast_multi``/``reduce_multi`` then issues exactly ``ngroups(op)``
+    backend exchanges — one per fusable group — instead of k.
+    """
+
+    def __init__(self, comm, specs: Sequence[FieldSpec]):
+        if not specs:
+            raise ValueError("FieldBundle needs at least one field")
+        self.comm = comm
+        self.specs = [sp if isinstance(sp, FieldSpec) else FieldSpec(*sp)
+                      for sp in specs]
+        if comm.unit.constrained:
+            for sp in self.specs:
+                comm.unit.check(
+                    np.zeros((0,) + sp.shape, sp.dtype), "bundle field")
+        # setup-time fusion plans for both op classes
+        self._byte_groups = _plan_groups(self.specs, by_bytes=True)
+        self._dtype_groups = _plan_groups(self.specs, by_bytes=False)
+        # the executing backend: shared with the comm unless its unit is
+        # pinned (the fused payload unit is the group width, not the field
+        # unit), in which case a sibling backend reuses the same plan arrays
+        # with the unit constraint lifted.
+        self._exec = comm.backend
+        if comm.unit.constrained:
+            self._exec = _sibling_backend(comm.backend)
+
+    @staticmethod
+    def for_data(comm, fields) -> "FieldBundle":
+        return FieldBundle(comm, [FieldSpec.of(f) for f in fields])
+
+    def ngroups(self, op="replace") -> int:
+        """Backend exchanges one multi-op issues (1 = fully fused)."""
+        return len(self._groups(get_op(op).name))
+
+    def _groups(self, opname: str) -> List[_Group]:
+        return self._byte_groups if opname == "replace" \
+            else self._dtype_groups
+
+    def _check(self, fields, what: str, nrows: int) -> None:
+        if len(fields) != len(self.specs):
+            raise ValueError(f"bundle has {len(self.specs)} fields, got "
+                             f"{len(fields)} {what} arrays")
+        for f, sp in zip(fields, self.specs):
+            sp.unit.check(f, what)
+        lengths = {int(np.shape(f)[0]) for f in fields}
+        if lengths - {nrows}:
+            raise ValueError(f"{what} fields have lengths {sorted(lengths)}; "
+                             f"bundles fuse same-length exchanges over the "
+                             f"SF's {nrows} rows only")
+
+    def _run(self, srcs, dsts, op, exchange, nsrc: int, ndst: int):
+        opname = get_op(op).name
+        out: List[Optional[jnp.ndarray]] = [None] * len(self.specs)
+        for g in self._groups(opname):
+            if len(g.members) == 1:
+                i = g.members[0]
+                out[i] = exchange(jnp.asarray(srcs[i]), jnp.asarray(dsts[i]),
+                                  op)
+                continue
+            fsrc = jnp.concatenate(
+                [_to_carrier(srcs[i], nsrc, w, g.carrier, g.bitcast)
+                 for i, w in zip(g.members, g.widths)], axis=1)
+            fdst = jnp.concatenate(
+                [_to_carrier(dsts[i], ndst, w, g.carrier, g.bitcast)
+                 for i, w in zip(g.members, g.widths)], axis=1)
+            fused = exchange(fsrc, fdst, op)
+            for k, i in enumerate(g.members):
+                cols = fused[:, g.offsets[k]: g.offsets[k + 1]]
+                out[i] = _from_carrier(cols, self.specs[i], ndst, g.bitcast)
+        return out
+
+    def bcast_multi(self, rootfields, leaffields, op="replace"):
+        """k root→leaf broadcasts as one fused exchange per group; returns
+        the updated leaf fields (user order)."""
+        nroot = self.comm.sf.nroots_total
+        nleaf = self.comm.sf.nleafspace_total
+        self._check(rootfields, "rootdata", nroot)
+        self._check(leaffields, "leafdata", nleaf)
+        return self._run(rootfields, leaffields, op, self._exec.bcast,
+                         nroot, nleaf)
+
+    def reduce_multi(self, leaffields, rootfields, op="sum"):
+        """k leaf→root reductions as one fused exchange per group; returns
+        the updated root fields (user order)."""
+        nroot = self.comm.sf.nroots_total
+        nleaf = self.comm.sf.nleafspace_total
+        self._check(leaffields, "leafdata", nleaf)
+        self._check(rootfields, "rootdata", nroot)
+        return self._run(leaffields, rootfields, op, self._exec.reduce,
+                         nleaf, nroot)
+
+
+def _sibling_backend(backend):
+    """A shallow copy of ``backend`` with only the plan's unit constraint
+    lifted — every other setting (interpret mode, lowering, sync_mode,
+    axis name, mesh, kernel toggles) is preserved as-is."""
+    dist = getattr(backend, "dist", None)      # shardmap facade
+    if dist is not None:
+        sib = copy.copy(backend)
+        free_dist = copy.copy(dist)
+        free_dist.plan = dataclasses.replace(dist.plan, unit=UnitSpec())
+        sib.dist = free_dist
+        sib._fns = {}          # cached jitted fns are bound to the old dist
+        return sib
+    plan = getattr(backend, "plan", None)
+    if plan is not None:
+        sib = copy.copy(backend)
+        sib.plan = dataclasses.replace(plan, unit=UnitSpec())
+        return sib
+    raise TypeError(f"cannot derive an unconstrained sibling of "
+                    f"{type(backend).__name__}")

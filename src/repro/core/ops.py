@@ -26,6 +26,7 @@ import numpy as np
 from .graph import StarForest
 from .mpiops import Op, get_op
 from .plan import GlobalPlan, build_global_plan
+from .unit import check_plan_unit
 
 __all__ = [
     "SFOps", "PendingComm",
@@ -61,12 +62,25 @@ class SFOps:
 
     The constructor performs the setup-time analysis (``GlobalPlan``); each
     method is a pure function suitable for ``jax.jit`` and ``jax.grad``.
+    Payload rows are ``(*unit)`` dof blocks of any rank and dtype (paper
+    §3.2's ``MPI_Datatype unit``); passing ``unit=`` pins the plan's unit
+    and validates payloads at the SF boundary.
     """
 
-    def __init__(self, sf: StarForest, plan: Optional[GlobalPlan] = None):
+    def __init__(self, sf: StarForest, plan: Optional[GlobalPlan] = None,
+                 unit=None):
         sf.setup()
         self.sf = sf
-        self.plan = plan or build_global_plan(sf)
+        if plan is not None:
+            check_plan_unit(plan, unit)
+            self.plan = plan
+        else:
+            self.plan = build_global_plan(sf, unit=unit)
+
+    @property
+    def unit(self):
+        """The plan's payload unit spec (paper §3.2 ``MPI_Datatype``)."""
+        return self.plan.unit
 
     # ------------------------------------------------------------- bcast
     def bcast_begin(self, rootdata: jnp.ndarray, op="replace") -> PendingComm:
@@ -74,6 +88,7 @@ class SFOps:
         op = get_op(op)
         p = self.plan
         rootdata = jnp.asarray(rootdata)
+        p.unit.check(rootdata, "rootdata")
         vals = jnp.take(rootdata, p.gr, axis=0)   # pack == gather
         return PendingComm("bcast", vals, op, self)
 
@@ -92,7 +107,9 @@ class SFOps:
         """Leaves push values toward roots."""
         op = get_op(op)
         p = self.plan
-        vals = jnp.take(jnp.asarray(leafdata), p.gl, axis=0)
+        leafdata = jnp.asarray(leafdata)
+        p.unit.check(leafdata, "leafdata")
+        vals = jnp.take(leafdata, p.gl, axis=0)
         return PendingComm("reduce", vals, op, self)
 
     def reduce_end(self, pending: PendingComm, rootdata: jnp.ndarray) -> jnp.ndarray:

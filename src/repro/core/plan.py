@@ -29,9 +29,11 @@ import numpy as np
 
 from .graph import StarForest, ragged_offsets
 from .redplan import ReductionPlan, build_reduction_plan
+from .unit import UnitSpec, resolve_unit
 from . import patterns as pat
 
-__all__ = ["GlobalPlan", "PaddedPlan", "build_global_plan", "build_padded_plan"]
+__all__ = ["GlobalPlan", "PaddedPlan", "build_global_plan",
+           "build_padded_plan"]
 
 # Deterministic order key: (leaf rank, edge index) packed into one int64.
 _RANK_STRIDE = 10 ** 12
@@ -56,6 +58,9 @@ class GlobalPlan:
     degrees: np.ndarray       # (nroots,) root degrees
     red: ReductionPlan        # shared sort-segment reduction machinery
     pattern: pat.PatternReport = None
+    # paper §3.2: the MPI_Datatype unit of payload rows.  Unconstrained by
+    # default; pinned units validate payloads at the SF boundary.
+    unit: UnitSpec = UnitSpec()
 
     @property
     def nedges(self) -> int:
@@ -88,7 +93,7 @@ class GlobalPlan:
         return self.red.win_src
 
 
-def build_global_plan(sf: StarForest) -> GlobalPlan:
+def build_global_plan(sf: StarForest, unit=None) -> GlobalPlan:
     edges = sf.edges_global()
     gr, gl = edges[:, 0], edges[:, 1]
     E = gr.shape[0]
@@ -112,6 +117,7 @@ def build_global_plan(sf: StarForest) -> GlobalPlan:
         degrees=degrees,
         red=red,
         pattern=pat.analyze(sf),
+        unit=resolve_unit(unit),
     )
 
 
@@ -159,9 +165,11 @@ class PaddedPlan:
     red_seg_len: np.ndarray = None    # (R, red_nslots) valid segment lengths
     red_Lmax: int = 1                 # panel height bound across ranks
     red_dup_free: bool = False        # every rank's segments have length 1
+    # paper §3.2 unit of payload rows (see GlobalPlan.unit)
+    unit: UnitSpec = UnitSpec()
 
 
-def build_padded_plan(sf: StarForest) -> PaddedPlan:
+def build_padded_plan(sf: StarForest, unit=None) -> PaddedPlan:
     R = sf.nranks
     nroots = np.array([sf.graph(r).nroots for r in range(R)], dtype=np.int64)
     nleaf = np.array([sf.graph(r).nleafspace for r in range(R)], dtype=np.int64)
@@ -276,4 +284,5 @@ def build_padded_plan(sf: StarForest) -> PaddedPlan:
         red_Lmax=max(max((red.max_valid_seg_len for red in rank_reds),
                          default=1), 1),
         red_dup_free=all(red.duplicate_free for red in rank_reds),
+        unit=resolve_unit(unit),
     )

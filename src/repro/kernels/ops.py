@@ -30,10 +30,11 @@ def default_interpret() -> bool:
 
 def pack_rows(data, idx, *, interpret=None):
     """``data[idx]`` row gather via the pack kernel for arbitrary unit
-    shapes: flattens trailing dims to one row width, packs, restores the
-    shape.  Degenerate shapes (no rows, no index, zero-width unit) fall back
-    to ``jnp.take``.  Shared by the pallas backend and the DistSF general
-    path."""
+    shapes: rows are ``(*unit)`` dof blocks of any rank and the kernel
+    blocks over the full unit extent — no flattening.  Scalar rows (1-D
+    data) ride as the degenerate one-lane unit ``(1,)``.  Degenerate shapes
+    (no rows, no index, zero-width unit) fall back to ``jnp.take``.  Shared
+    by the pallas backend and the DistSF general path."""
     data = jnp.asarray(data)
     unit = data.shape[1:]
     usize = int(np.prod(unit)) if unit else 1
@@ -41,28 +42,33 @@ def pack_rows(data, idx, *, interpret=None):
     n_idx = int(np.prod(idx_shape)) if idx_shape else 1
     if usize == 0 or n_idx == 0 or data.shape[0] == 0:
         return jnp.take(data, jnp.asarray(idx), axis=0)
-    d2 = data.reshape(data.shape[0], usize)
-    out = sf_pack(d2, jnp.asarray(idx).reshape(-1), interpret=interpret)
+    scalar_rows = data.ndim == 1
+    if scalar_rows:
+        data = data[:, None]
+    out = sf_pack(data, jnp.asarray(idx).reshape(-1), interpret=interpret)
+    if scalar_rows:
+        out = out[:, 0]
     return out.reshape(idx_shape + tuple(unit))
 
 
 def segment_reduce_rows(sorted_vals, seg_first, seg_len, *, num_segments,
                         Lmax, op="sum", interpret=None):
     """Kernel segment-reduce over a sorted row buffer of arbitrary unit
-    shape; pads ``Lmax`` rows so the last panel load stays in bounds (the
-    pad content is masked out by the per-segment length).  Shared by the
-    pallas backend and the DistSF general path."""
+    shape (the panel blocks over the full unit extent — no flattening);
+    pads ``Lmax`` rows so the last panel load stays in bounds (the pad
+    content is masked out by the per-segment length).  Shared by the pallas
+    backend and the DistSF general path."""
     interpret = default_interpret() if interpret is None else interpret
     sorted_vals = jnp.asarray(sorted_vals)
-    unit = sorted_vals.shape[1:]
-    usize = int(np.prod(unit)) if unit else 1
-    s2 = sorted_vals.reshape(sorted_vals.shape[0], usize)
-    pad = jnp.zeros((Lmax, usize), s2.dtype)
+    scalar_rows = sorted_vals.ndim == 1
+    if scalar_rows:
+        sorted_vals = sorted_vals[:, None]
+    pad = jnp.zeros((Lmax,) + sorted_vals.shape[1:], sorted_vals.dtype)
     out = segment_reduce_sorted(
-        jnp.concatenate([s2, pad], axis=0), jnp.asarray(seg_first),
+        jnp.concatenate([sorted_vals, pad], axis=0), jnp.asarray(seg_first),
         jnp.asarray(seg_len), num_segments=num_segments, Lmax=Lmax, op=op,
         interpret=interpret)
-    return out.reshape((num_segments,) + tuple(unit))
+    return out[:, 0] if scalar_rows else out
 
 
 def sf_pack(data, idx, *, interpret=None):

@@ -9,9 +9,16 @@ analogue of the CUDA pack kernel's coalesced loads: the DMA engine performs
 the indirection while the previous step's store retires (Pallas double-buffers
 blocks by default), so the row copies pipeline.
 
+Unit awareness (paper §3.2: every SF op takes an ``MPI_Datatype unit``): rows
+are dof *blocks* ``(*unit)`` of any rank and dtype, not flat stride-1
+vectors.  The BlockSpec blocks over the whole trailing unit shape — a
+``(n, 3)`` coordinate payload or a ``(n, 2, 2)`` tensor dof moves as one
+block per row with no caller-side flattening.
+
 Variants:
-  * ``pack``          — general index-list pack; rows of width U (pad U to a
-                        multiple of 128 lanes for full-lane DMAs).
+  * ``pack``          — general index-list pack; one ``(1, *unit)`` block per
+                        grid step (pad the innermost dim to a multiple of 128
+                        lanes for full-lane DMAs).
   * ``pack_strided``  — paper §5.2 ¶3 parametric 3D-subdomain pack: row
                         addresses are *computed* from (start, dims, strides);
                         no index array exists anywhere, saving the SMEM/HBM
@@ -38,18 +45,25 @@ def _copy_kernel(*refs):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def pack(data: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = True
          ) -> jnp.ndarray:
-    """out[i] = data[idx[i]].  data: (N, U), idx: (M,) -> out: (M, U)."""
+    """out[i] = data[idx[i]].  data: (N, *unit), idx: (M,) -> out: (M, *unit).
+
+    The unit may have any rank >= 1; the block schedule tiles over the full
+    unit extent so multi-dim dof blocks move without flattening.
+    """
     M = int(idx.shape[0])
-    U = int(data.shape[1])
+    unit = tuple(int(d) for d in data.shape[1:])
+    zeros = (0,) * len(unit)
     return pl.pallas_call(
         _copy_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(M,),
-            in_specs=[pl.BlockSpec((1, U), lambda i, idx_ref: (idx_ref[i], 0))],
-            out_specs=pl.BlockSpec((1, U), lambda i, idx_ref: (i, 0)),
+            in_specs=[pl.BlockSpec((1,) + unit,
+                                   lambda i, idx_ref: (idx_ref[i],) + zeros)],
+            out_specs=pl.BlockSpec((1,) + unit,
+                                   lambda i, idx_ref: (i,) + zeros),
         ),
-        out_shape=jax.ShapeDtypeStruct((M, U), data.dtype),
+        out_shape=jax.ShapeDtypeStruct((M,) + unit, data.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), data)
 
@@ -60,24 +74,27 @@ def pack_strided(data: jnp.ndarray, *, start: int, dims, strides,
                  interpret: bool = True) -> jnp.ndarray:
     """Pack rows ``start + i*sx + j*sy + k*sz`` for (i,j,k) < dims, sx == 1.
 
-    Each grid step moves one contiguous (dx, U) row panel — face/pencil
-    subdomains of a regular grid move as whole panels, the same win the
-    paper's multi-strided packs get from fewer indirections.  The input
-    block uses element-offset indexing (``pl.unblocked``) because panel
-    starts are not multiples of the panel height.
+    ``data`` is ``(N, *unit)`` with any unit rank; each grid step moves one
+    contiguous ``(dx, *unit)`` row panel — face/pencil subdomains of a
+    regular grid move as whole panels, the same win the paper's
+    multi-strided packs get from fewer indirections.  The input block uses
+    element-offset indexing (``pl.unblocked``) because panel starts are not
+    multiples of the panel height.
     """
     dx, dy, dz = (int(d) for d in dims)
     sx, sy, sz = (int(s) for s in strides)
     if sx != 1:
         raise ValueError("pack_strided requires unit inner stride")
-    U = int(data.shape[1])
+    unit = tuple(int(d) for d in data.shape[1:])
+    zeros = (0,) * len(unit)
     return pl.pallas_call(
         _copy_kernel,
         grid=(dy, dz),
-        in_specs=[pl.BlockSpec((dx, U),
-                               lambda j, k: (start + j * sy + k * sz, 0),
+        in_specs=[pl.BlockSpec((dx,) + unit,
+                               lambda j, k: (start + j * sy + k * sz,) + zeros,
                                indexing_mode=pl.unblocked)],
-        out_specs=pl.BlockSpec((dx, U), lambda j, k: (j + k * dy, 0)),
-        out_shape=jax.ShapeDtypeStruct((dx * dy * dz, U), data.dtype),
+        out_specs=pl.BlockSpec((dx,) + unit,
+                               lambda j, k: (j + k * dy,) + zeros),
+        out_shape=jax.ShapeDtypeStruct((dx * dy * dz,) + unit, data.dtype),
         interpret=interpret,
     )(data)

@@ -57,7 +57,7 @@ def _make_kernel(op: str, Lmax: int):
 
     def kernel(meta_ref, buf_ref, out_ref):
         # meta_ref: (2, S) SMEM — row 0: segment start, row 1: segment length.
-        # buf_ref:  (Lmax, U) panel starting at this segment's first row.
+        # buf_ref:  (Lmax, *unit) panel starting at this segment's first row.
         s = pl.program_id(0)
         length = meta_ref[1, s]
         panel = buf_ref[...]
@@ -86,13 +86,16 @@ def segment_reduce_sorted(buf: jnp.ndarray, seg_start: jnp.ndarray,
                           ) -> jnp.ndarray:
     """Reduce sorted rows into per-segment rows.
 
-    buf:       (M, U) rows sorted by destination; padded with >= Lmax extra
-               rows so every panel load is in bounds (caller pads).
+    buf:       (M, *unit) rows sorted by destination, any unit rank >= 1;
+               padded with >= Lmax extra rows so every panel load is in
+               bounds (caller pads).  The panel blocks over the full unit
+               extent, so multi-dim dof blocks reduce without flattening.
     seg_start: (S,) first row of each segment.
     seg_len:   (S,) segment length (<= Lmax).
-    Returns (num_segments, U).
+    Returns (num_segments, *unit).
     """
-    U = int(buf.shape[1])
+    unit = tuple(int(d) for d in buf.shape[1:])
+    zeros = (0,) * len(unit)
     meta = jnp.stack([seg_start.astype(jnp.int32),
                       seg_len.astype(jnp.int32)], axis=0)
     return pl.pallas_call(
@@ -100,12 +103,14 @@ def segment_reduce_sorted(buf: jnp.ndarray, seg_start: jnp.ndarray,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(num_segments,),
-            in_specs=[pl.BlockSpec((Lmax, U),
-                                   lambda s, meta_ref: (meta_ref[0, s], 0),
+            in_specs=[pl.BlockSpec((Lmax,) + unit,
+                                   lambda s, meta_ref: (meta_ref[0, s],)
+                                   + zeros,
                                    indexing_mode=pl.unblocked)],
-            out_specs=pl.BlockSpec((1, U), lambda s, meta_ref: (s, 0)),
+            out_specs=pl.BlockSpec((1,) + unit,
+                                   lambda s, meta_ref: (s,) + zeros),
         ),
-        out_shape=jax.ShapeDtypeStruct((num_segments, U), buf.dtype),
+        out_shape=jax.ShapeDtypeStruct((num_segments,) + unit, buf.dtype),
         interpret=interpret,
     )(meta, buf)
 
@@ -125,7 +130,7 @@ def unpack_segments(target: jnp.ndarray, buf_sorted: jnp.ndarray,
         return target
     Lmax = max(int(np.max(seg_len)), 1)
     # pad buffer so the last panel load stays in bounds
-    pad = jnp.zeros((Lmax, buf_sorted.shape[1]), buf_sorted.dtype)
+    pad = jnp.zeros((Lmax,) + buf_sorted.shape[1:], buf_sorted.dtype)
     buf_p = jnp.concatenate([buf_sorted, pad], axis=0)
     red = segment_reduce_sorted(buf_p, jnp.asarray(seg_start),
                                 jnp.asarray(seg_len), num_segments=S,

@@ -24,6 +24,20 @@ from repro.core.backend import PallasBackend
 INPROCESS_BACKENDS = ["global", "pallas"]
 ALL_OPS = ["replace", "sum", "max", "min", "prod"]
 
+# paper §3.2 unit coverage: vector and tensor dof blocks, non-f32 dtypes
+# (i32 exact; f64 is weakened to f32 by jnp, the oracle stays f64).
+UNIT_DTYPE_CASES = [
+    ((3,), np.float32), ((2, 2), np.float32),
+    ((3,), np.int32), ((2, 2), np.int32),
+    ((3,), np.float64), ((), np.int32),
+]
+
+
+def _payload(rng, shape, dtype):
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        return rng.integers(1, 50, shape).astype(dtype)
+    return rng.standard_normal(shape).astype(dtype)
+
 
 @pytest.fixture(params=sorted(FIXTURES))
 def fixture_sf(request):
@@ -103,6 +117,47 @@ def test_begin_end_equals_fused(backend, fixture_sf, rng):
     out = pend.end(jnp.asarray(leaf))
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(comm.bcast(root, leaf, "replace")))
+
+
+# ------------------------------------------------ unit-shape / dtype sweep
+@pytest.mark.parametrize("backend", INPROCESS_BACKENDS)
+@pytest.mark.parametrize("fixture", ["general0", "strided"])
+@pytest.mark.parametrize("unit,dtype", UNIT_DTYPE_CASES)
+@pytest.mark.parametrize("op", ["replace", "sum"])
+def test_unit_dtype_conformance(backend, fixture, unit, dtype, op, rng):
+    """Vector/tensor units of any dtype pass through every backend without
+    per-call reshapes and agree with the oracle (paper §3.2 unit)."""
+    sf = FIXTURES[fixture]()
+    comm = SFComm(sf, backend=backend)
+    root = _payload(rng, (sf.nroots_total,) + unit, dtype)
+    leaf = _payload(rng, (sf.nleafspace_total,) + unit, dtype)
+    got_b = np.asarray(comm.bcast(jnp.asarray(root), jnp.asarray(leaf), op))
+    want_b = simulate.bcast_ref(sf, root, leaf, op)
+    got_r = np.asarray(comm.reduce(jnp.asarray(leaf), jnp.asarray(root), op))
+    want_r = simulate.reduce_ref(sf, leaf, root, op)
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        np.testing.assert_array_equal(got_b, want_b)
+        np.testing.assert_array_equal(got_r, want_r)
+    else:
+        np.testing.assert_allclose(got_b, want_b, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_r, want_r, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", INPROCESS_BACKENDS)
+def test_pinned_unit_validates(backend):
+    """SFComm(unit=...) pins the payload contract and rejects mismatches at
+    the SF boundary instead of deep inside a kernel."""
+    sf = FIXTURES["general0"]()
+    comm = SFComm(sf, backend=backend, unit=(3,))
+    assert comm.unit.shape == (3,)
+    root = np.ones((sf.nroots_total, 3), np.float32)
+    leaf = np.zeros((sf.nleafspace_total, 3), np.float32)
+    want = simulate.bcast_ref(sf, root, leaf)
+    np.testing.assert_allclose(np.asarray(comm.bcast(root, leaf)), want)
+    with pytest.raises(ValueError, match="unit shape"):
+        comm.bcast(root[:, :2], leaf[:, :2])
+    with pytest.raises(ValueError, match="unit shape"):
+        comm.reduce(leaf[:, :1], root[:, :1])
 
 
 # ------------------------------------------------------- selection/registry
@@ -213,6 +268,28 @@ SHARDMAP_SCRIPT = textwrap.dedent("""
         gr, gl = comm.fetch_and_op(ri, li)
         np.testing.assert_array_equal(np.asarray(gr), wr)
         np.testing.assert_array_equal(np.asarray(gl), wl)
+        # vector/tensor units of non-f32 dtypes (paper 3.2 unit)
+        for unit, dt in (((3,), np.int32), ((2, 2), np.float32)):
+            r_u = rng.integers(1, 40, (sf.nroots_total,) + unit).astype(dt)
+            l_u = rng.integers(1, 40, (sf.nleafspace_total,) + unit).astype(dt)
+            got = np.asarray(comm.bcast(r_u, l_u, "replace"))
+            np.testing.assert_allclose(
+                got, simulate.bcast_ref(sf, r_u, l_u, "replace"),
+                err_msg=f"unit bcast {{unit}} {{name}}")
+            got = np.asarray(comm.reduce(l_u, r_u, "sum"))
+            np.testing.assert_allclose(
+                got, simulate.reduce_ref(sf, l_u, r_u, "sum"), rtol=1e-4,
+                err_msg=f"unit reduce {{unit}} {{name}}")
+        # fused multi-field exchange through the shardmap backend
+        roots = [rng.standard_normal((sf.nroots_total,)).astype(np.float32),
+                 rng.integers(0, 9, (sf.nroots_total, 2)).astype(np.int32)]
+        leaves = [rng.standard_normal((sf.nleafspace_total,)).astype(np.float32),
+                  rng.integers(0, 9, (sf.nleafspace_total, 2)).astype(np.int32)]
+        outs = comm.bcast_multi(roots, leaves, "replace")
+        for o, r2, l2 in zip(outs, roots, leaves):
+            np.testing.assert_allclose(np.asarray(o),
+                                       simulate.bcast_ref(sf, r2, l2),
+                                       err_msg=f"bcast_multi {{name}}")
         print(name, "OK")
     print("SHARDMAP-CONFORMANCE-OK")
 """).format(src=REPO_SRC, tests=TESTS)
