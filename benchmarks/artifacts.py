@@ -1,13 +1,37 @@
 """Where benchmark trajectory artifacts (``BENCH_*.json``) land.
 
 One definition of the artifact directory (the repo root, where CI picks
-them up) shared by every bench module.
+them up) shared by every bench module, plus the environment *stamp* each
+artifact carries.  The stamp (jax version, platform, device count) is what
+lets :mod:`repro.core.priors` refuse stale or cross-platform measurements
+when ``select_backend`` consults the shipped artifacts.
 """
 
+import json
 import os
+
+import jax
 
 
 def artifact_path(name: str) -> str:
     """Absolute path of a ``BENCH_*.json`` artifact at the repo root."""
     return os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))), name)
+
+
+def stamp() -> dict:
+    """The environment stamp written into every artifact's ``meta`` —
+    must stay in sync with :func:`repro.core.priors.current_env`."""
+    return {"jax_version": jax.__version__,
+            "platform": jax.default_backend(),
+            "device_count": jax.device_count()}
+
+
+def write_artifact(path: str, report: dict) -> None:
+    """Stamp ``report`` with the current environment and write it.  All
+    bench modules route their JSON through here so no artifact ships
+    unstamped (unstamped artifacts are refused as priors)."""
+    report = dict(report)
+    report["meta"] = stamp()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)

@@ -13,7 +13,6 @@ the ``pallas`` backend the contiguous index lists engage the parametric
 strided pack kernel (§5.2 ¶3) and the duplicate-free reduce fast path.
 """
 
-import json
 import time
 
 import jax
@@ -22,7 +21,7 @@ import numpy as np
 
 from repro.core import SFComm, StarForest
 
-from benchmarks.artifacts import artifact_path
+from benchmarks.artifacts import artifact_path, write_artifact
 
 DEFAULT_JSON = artifact_path("BENCH_pingpong.json")
 
@@ -81,6 +80,5 @@ def run(sizes_bytes=(1024, 4096, 16384, 65536, 262144, 1048576, 4194304),
                          f"overhead_vs_raw={us_sf - us_raw:.1f}us"))
         rows.append((f"pingpong_raw_{nbytes}B", us_raw, ""))
     if json_path:   # pass json_path=None to skip the trajectory artifact
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
+        write_artifact(json_path, report)
     return rows

@@ -1,0 +1,86 @@
+"""CI perf guard for the tuned pack hot path.
+
+Re-times the tuned ``pack_rows`` lowering on the committed
+``BENCH_kernels.json`` problem (4096×128 f32 rows, 128-row gather) and fails
+(exit 1) when it regresses more than ``THRESHOLD``× against the committed
+baseline — the trajectory gate for exactly the pack-kernel gap this layer
+closed.
+
+Skips gracefully (exit 0, with a reason) when there is nothing sound to
+compare against: no committed artifact, an artifact without the
+environment stamp, a stamp from another platform/jax/device-count (timings
+are not transferable), or a committed baseline taken in a different
+interpret mode than this run would use.
+
+Usage: ``PYTHONPATH=src:. python benchmarks/perf_guard.py``
+"""
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+THRESHOLD = 2.0
+BASELINE_ROW = "pack_kernel_128x128"
+
+
+def _skip(reason: str) -> int:
+    print(f"perf-guard: SKIP ({reason})")
+    return 0
+
+
+def _fresh_pack_us(iters=50) -> float:
+    from repro.kernels import ops as K
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.standard_normal((4096, 128)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 4096, 128).astype(np.int32))
+    key = ("perf_guard", "pack128")
+    jax.block_until_ready(K.pack_rows(data, idx, key=key))  # tune + compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = K.pack_rows(data, idx, key=key)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def main() -> int:
+    from benchmarks.artifacts import artifact_path
+    from repro.core.priors import stamp_compatible
+
+    path = artifact_path("BENCH_kernels.json")
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, ValueError):
+        return _skip(f"no committed baseline at {path}")
+    meta = obj.get("meta")
+    if not stamp_compatible(meta):
+        return _skip(f"baseline stamp {meta!r} does not match this "
+                     "environment; timings not transferable")
+    base = obj.get("timings", {}).get(BASELINE_ROW)
+    if not base:
+        return _skip(f"baseline has no {BASELINE_ROW!r} timing")
+    from repro.kernels.tuning import resolve_interpret
+    if bool(obj.get("interpret", True)) != resolve_interpret():
+        return _skip("baseline interpret mode differs from this run")
+
+    fresh = _fresh_pack_us()
+    ratio = fresh / float(base)
+    line = (f"perf-guard: {BASELINE_ROW} fresh={fresh:.1f}us "
+            f"baseline={float(base):.1f}us ratio={ratio:.2f}x "
+            f"(threshold {THRESHOLD}x)")
+    if ratio > THRESHOLD:
+        print(line + "  FAIL")
+        return 1
+    print(line + "  OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

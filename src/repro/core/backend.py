@@ -46,10 +46,12 @@ from .graph import StarForest
 from .mpiops import Op, get_op
 from .ops import PendingComm, SFOps, _apply_unique
 from .plan import GlobalPlan, build_global_plan
-from .unit import check_plan_unit
+from .unit import check_plan_unit, resolve_unit
 from .distributed import DistSF
 from . import patterns as pat
+from . import priors as priors_mod
 from ..kernels import ops as kops
+from ..kernels.tuning import resolve_interpret
 
 __all__ = [
     "SFBackend", "SFComm",
@@ -110,17 +112,35 @@ def make_backend(name: str, sf: StarForest, **kwargs) -> "SFBackend":
     return factory(sf, **kwargs)
 
 
-def select_backend(sf: StarForest, mesh=None, hint: Optional[str] = None
-                   ) -> str:
+def estimate_message_bytes(sf: StarForest, unit=None) -> float:
+    """Per-exchange payload bytes for ``sf``: edges × unit row bytes
+    (scalar float32 rows when the unit is unpinned) — the lookup key into
+    the measured priors table."""
+    u = resolve_unit(unit)
+    row_bytes = u.nbytes if u.nbytes else 4 * max(u.size, 1)
+    return float(sf.nedges_total) * row_bytes
+
+
+def select_backend(sf: StarForest, mesh=None, hint: Optional[str] = None, *,
+                   unit=None, priors=None) -> str:
     """Pick a backend name for ``sf`` (the ``-sf_backend`` default logic).
 
     Order: an explicit ``hint`` wins (validated against the registry); a
     ``mesh`` whose device count matches ``sf.nranks`` selects the explicit
-    shard_map decomposition; general-pattern SFs on an accelerator take the
-    Pallas kernel path (on CPU the kernels only interpret, so the jnp global
-    path is faster); everything else — including the allgather/permute
-    patterns whose §5.2 lowerings live in the shard_map/global paths —
-    defaults to ``"global"``.
+    shard_map decomposition; then the *measured priors table* — shipped
+    ``BENCH_*.json`` artifacts parsed by :mod:`repro.core.priors`, trusted
+    only when their stamp matches this platform/jax/device-count — picks the
+    backend the measurements favor at the SF's message size (paper abstract:
+    choose the implementation "based on the characteristics of the
+    application or the target architecture").  When no compatible
+    measurements exist the static heuristic decides: general-pattern SFs on
+    an accelerator take the Pallas kernel path, everything else — including
+    the allgather/permute patterns whose §5.2 lowerings live in the
+    shard_map/global paths — defaults to ``"global"``.
+
+    ``unit`` sharpens the message-size estimate; ``priors`` substitutes an
+    explicit :class:`repro.core.priors.PriorsTable` (tests, fresh
+    calibration runs).  ``REPRO_SF_PRIORS=0`` disables the table.
     """
     sf.setup()
     if hint is not None:
@@ -131,6 +151,14 @@ def select_backend(sf: StarForest, mesh=None, hint: Optional[str] = None
     if mesh is not None and sf.nranks > 1 \
             and int(np.prod(mesh.devices.shape)) == sf.nranks:
         return "shardmap"
+    if sf.nedges_total:
+        table = priors if priors is not None else priors_mod.default_priors()
+        if table is not None:
+            cands = [b for b in ("global", "pallas") if b in _REGISTRY]
+            choice = table.best_backend(estimate_message_bytes(sf, unit),
+                                        candidates=cands)
+            if choice is not None:
+                return choice
     rep = pat.analyze(sf)
     # kernels only compile (Mosaic) on TPU; everywhere else they interpret,
     # so the jnp global path is the faster default
@@ -176,8 +204,9 @@ class PallasBackend:
             self.plan = plan
         else:
             self.plan = build_global_plan(sf, unit=unit)
-        self.interpret = kops.default_interpret() if interpret is None \
-            else bool(interpret)
+        self.interpret = resolve_interpret(interpret)
+        # autotune/kernel-cache scope: one signature per (pattern, unit)
+        self._tune_key = self.plan.comm_signature()
         p, red = self.plan, self.plan.red
         # setup-time index products (PetscSFSetUp analogue)
         self._gl_sorted = p.gl[red.perm]       # pack list for reduce
@@ -199,7 +228,8 @@ class PallasBackend:
         enumeration is parametric).  Both kernels block over the full
         ``(*unit)`` row shape, so payloads pass through unreshaped."""
         if strided is None:
-            return kops.pack_rows(data, idx, interpret=self.interpret)
+            return kops.pack_rows(data, idx, interpret=self.interpret,
+                                  key=self._tune_key)
         data = jnp.asarray(data)
         unit = data.shape[1:]
         usize = int(np.prod(unit)) if unit else 1
@@ -219,7 +249,8 @@ class PallasBackend:
         red = self.plan.red
         return kops.segment_reduce_rows(
             sorted_vals, red.seg_first, red.seg_len, num_segments=red.nseg,
-            Lmax=red.max_valid_seg_len, op=opname, interpret=self.interpret)
+            Lmax=red.max_valid_seg_len, op=opname, interpret=self.interpret,
+            seg_of_slot=red.seg_of_slot, key=self._tune_key)
 
     # ------------------------------------------------------------- bcast
     def bcast_begin(self, rootdata: jnp.ndarray, op="replace") -> PendingComm:
@@ -237,7 +268,20 @@ class PallasBackend:
                              pending.payload, pending.op)
 
     def bcast(self, rootdata, leafdata, op="replace"):
-        return self.bcast_end(self.bcast_begin(rootdata, op), leafdata)
+        p, opn = self.plan, get_op(op)
+        if (opn.name == "replace" and p.nedges
+                and p.pattern is not None
+                and p.pattern.kind == pat.LOCAL_ONLY):
+            # §5.2 local/remote split: self-communication takes the fused
+            # pack→unpack kernel — no intermediate packed leaf buffer
+            rootdata = jnp.asarray(rootdata)
+            leafdata = jnp.asarray(leafdata)
+            p.unit.check(rootdata, "rootdata")
+            p.unit.check(leafdata, "leafdata")
+            return kops.local_bcast_rows(rootdata, leafdata, p.gr, p.gl,
+                                         interpret=self.interpret,
+                                         key=self._tune_key)
+        return self.bcast_end(self.bcast_begin(rootdata, opn), leafdata)
 
     # ------------------------------------------------------------- reduce
     def reduce_begin(self, leafdata: jnp.ndarray, op="sum") -> PendingComm:
@@ -487,6 +531,15 @@ class SFComm:
     move *several* same-pattern fields in one exchange (the VecScatter
     fusion), use :meth:`bcast_multi` / :meth:`reduce_multi`, which route
     through a cached :class:`repro.core.fields.FieldBundle`.
+
+    Backend auto-selection is *measurement-driven* when compatible shipped
+    benchmark artifacts exist (see :mod:`repro.core.priors`), and the Pallas
+    backend autotunes its kernel block shapes on first use per communication
+    signature (see :mod:`repro.kernels.tuning`).  The README section
+    "Data-driven backend selection & autotuning" documents the env knobs
+    (``REPRO_SF_PRIORS``, ``REPRO_SF_INTERPRET``, ``REPRO_SF_AUTOTUNE``,
+    ``REPRO_SF_IMPL_*``, ``REPRO_SF_TUNE_ITERS``) and how to regenerate the
+    priors artifacts.
     """
 
     def __init__(self, sf: StarForest, backend: Optional[str] = None, *,
@@ -494,7 +547,7 @@ class SFComm:
         sf.setup()
         self.sf = sf
         name = backend if backend is not None \
-            else select_backend(sf, mesh=mesh)
+            else select_backend(sf, mesh=mesh, unit=unit)
         self.backend = make_backend(name, sf, mesh=mesh, unit=unit,
                                     **backend_kwargs)
         self._bundles: Dict[Any, Any] = {}

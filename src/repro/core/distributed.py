@@ -151,7 +151,7 @@ class DistSF:
         Pallas kernel (paper §5.3), or ``jnp.take`` when kernels are off."""
         if not self.use_kernels:
             return jnp.take(data, idx, axis=0)
-        return kops.pack_rows(data, idx)
+        return kops.pack_rows(data, idx, key=self.plan.comm_signature())
 
     def _segment_reduce_kernel(self, sortedv: jnp.ndarray, me,
                                op: Op) -> jnp.ndarray:
@@ -161,7 +161,7 @@ class DistSF:
         return kops.segment_reduce_rows(
             sortedv, _take_row(p.red_seg_first, me),
             _take_row(p.red_seg_len, me), num_segments=p.red_nslots,
-            Lmax=p.red_Lmax, op=op.name)
+            Lmax=p.red_Lmax, op=op.name, key=p.comm_signature())
 
     def _barrier(self, *xs):
         if len(xs) == 1:

@@ -66,6 +66,18 @@ class GlobalPlan:
     def nedges(self) -> int:
         return int(self.gr.shape[0])
 
+    def comm_signature(self) -> tuple:
+        """Hashable (pattern, unit) signature scoping the kernel autotune /
+        compiled-kernel caches (:mod:`repro.kernels.tuning`): two plans with
+        the same signature reuse each other's tuned lowerings, so repeated
+        halo exchanges (CG iterations, DMDA sweeps, FieldBundle
+        multi-exchanges) never re-sweep or re-trace."""
+        return ("global", self.nroots, self.nleafspace, self.nedges,
+                self.red.nseg, self.red.max_valid_seg_len,
+                self.red.duplicate_free, self.unit.shape,
+                None if self.unit.dtype is None else self.unit.dtype.str,
+                None if self.pattern is None else self.pattern.kind)
+
     # views of the shared machinery (single source of truth: ``red``)
     @property
     def red_perm(self) -> np.ndarray:
@@ -167,6 +179,15 @@ class PaddedPlan:
     red_dup_free: bool = False        # every rank's segments have length 1
     # paper §3.2 unit of payload rows (see GlobalPlan.unit)
     unit: UnitSpec = UnitSpec()
+
+    def comm_signature(self) -> tuple:
+        """Hashable (pattern, unit) signature scoping the kernel autotune
+        caches (see :meth:`GlobalPlan.comm_signature`)."""
+        return ("padded", self.nranks, self.root_pad, self.leaf_pad, self.P,
+                self.self_pad, self.red_nslots, self.red_Lmax,
+                self.red_dup_free, self.unit.shape,
+                None if self.unit.dtype is None else self.unit.dtype.str,
+                None if self.pattern is None else self.pattern.kind)
 
 
 def build_padded_plan(sf: StarForest, unit=None) -> PaddedPlan:

@@ -1,0 +1,194 @@
+"""Measurement-driven backend selection priors (paper abstract, §4–§5).
+
+PetscSF picks its implementation "based on the characteristics of the
+application or the target architecture".  The static heuristic in
+``select_backend`` encodes the *architecture* half (platform, mesh shape);
+this module adds the *measurement* half: the shipped benchmark artifacts
+(``BENCH_pingpong.json``, ``BENCH_halo.json``) are parsed into a priors
+table mapping ``message bytes -> per-backend µs``, and ``select_backend``
+consults it to pick the backend the measurements actually favor at the SF's
+message size — the JAX analogue of ``-sf_backend`` auto-selection tuned by
+``make streamtable``-style calibration runs.
+
+Artifacts are only trusted when their ``meta`` stamp (written by
+:mod:`benchmarks.artifacts`) matches the current environment: same jax
+major.minor, same platform (``cpu``/``gpu``/``tpu``), same device count.
+Stale or cross-platform numbers are refused and selection falls back to the
+static heuristic.  Regenerate the artifacts with
+``python benchmarks/run.py --only pingpong,halo`` (see README).
+
+``REPRO_SF_PRIORS=0`` disables priors entirely; setting it to a directory
+path loads the artifacts from there instead of the repo root.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["PriorsTable", "current_env", "stamp_compatible",
+           "default_priors", "invalidate_priors_cache",
+           "PRIOR_ARTIFACTS"]
+
+PRIOR_ARTIFACTS = ("BENCH_pingpong.json", "BENCH_halo.json")
+
+
+def current_env() -> Dict[str, object]:
+    """The stamp the current process would write on an artifact."""
+    return {"jax_version": jax.__version__,
+            "platform": jax.default_backend(),
+            "device_count": jax.device_count()}
+
+
+def stamp_compatible(meta: Optional[dict], env: Optional[dict] = None
+                     ) -> bool:
+    """True when an artifact's ``meta`` stamp matches the current
+    environment closely enough for its timings to be trusted: same
+    platform, same jax major.minor, same device count.  Unstamped artifacts
+    (pre-stamp PRs) are refused."""
+    if not isinstance(meta, dict):
+        return False
+    env = env or current_env()
+    if meta.get("platform") != env["platform"]:
+        return False
+    have = str(meta.get("jax_version", "")).split(".")[:2]
+    want = str(env["jax_version"]).split(".")[:2]
+    if have != want:
+        return False
+    try:
+        if int(meta.get("device_count", -1)) != int(env["device_count"]):
+            return False
+    except (TypeError, ValueError):
+        return False
+    return True
+
+
+@dataclasses.dataclass
+class PriorsTable:
+    """``(backend, message bytes) -> µs`` measurements + lookup.
+
+    ``best_backend`` interpolates each backend's measured curve in
+    log-byte space (clamped to the measured range) and returns the argmin —
+    but only when at least two candidate backends have data, so a
+    single-backend artifact can never force a choice.
+    """
+
+    records: List[Tuple[str, float, float]] = dataclasses.field(
+        default_factory=list)              # (backend, nbytes, us)
+    meta: Optional[dict] = None
+    sources: List[str] = dataclasses.field(default_factory=list)
+
+    def record(self, backend: str, nbytes: float, us: float) -> None:
+        if nbytes > 0 and us > 0:
+            self.records.append((str(backend), float(nbytes), float(us)))
+
+    def backends(self) -> set:
+        return {b for b, _, _ in self.records}
+
+    def _curve(self, backend: str) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        pts = sorted((nb, us) for b, nb, us in self.records if b == backend)
+        if not pts:
+            return None
+        x = np.log2(np.array([p[0] for p in pts]))
+        y = np.array([p[1] for p in pts])
+        # collapse duplicate sizes to their mean
+        ux = np.unique(x)
+        uy = np.array([y[x == v].mean() for v in ux])
+        return ux, uy
+
+    def predict_us(self, backend: str, nbytes: float) -> Optional[float]:
+        curve = self._curve(backend)
+        if curve is None or nbytes <= 0:
+            return None
+        ux, uy = curve
+        return float(np.interp(np.log2(nbytes), ux, uy))
+
+    def best_backend(self, nbytes: float, candidates=None
+                     ) -> Optional[str]:
+        """The measured-fastest backend at ``nbytes``, or None when fewer
+        than two candidates have measurements (no basis for a choice)."""
+        names = sorted(self.backends() if candidates is None
+                       else set(candidates) & self.backends())
+        preds = [(self.predict_us(b, nbytes), b) for b in names]
+        preds = [(us, b) for us, b in preds if us is not None]
+        if len(preds) < 2:
+            return None
+        return min(preds)[1]
+
+    # -------------------------------------------------------- construction
+    def ingest_artifact(self, obj: dict, source: str = "") -> int:
+        """Parse one BENCH_*.json payload; returns records added.  Knows the
+        pingpong schema (backends -> {bytes: us}) and the halo grid-sweep
+        schema (grids -> {halo_edges, backends -> unit_us})."""
+        added = 0
+        bench = obj.get("bench")
+        if bench == "pingpong":
+            for bk, sizes in obj.get("backends", {}).items():
+                for nbytes, us in sizes.items():
+                    self.record(bk, float(nbytes), us)
+                    added += 1
+        elif bench == "halo":
+            grids = obj.get("grids")
+            if grids is None:       # pre-sweep schema: one grid at top level
+                grids = {"default": obj}
+            for g in grids.values():
+                edges = float(g.get("halo_edges", 0))
+                for bk, series in g.get("backends", {}).items():
+                    if bk == "auto":
+                        continue    # derived row, not a fixed-backend prior
+                    for u, us in series.get("unit_us", {}).items():
+                        self.record(bk, edges * float(u) * 4, us)
+                        added += 1
+        if added and source:
+            self.sources.append(source)
+        return added
+
+    @classmethod
+    def load(cls, root: Optional[str] = None, env: Optional[dict] = None
+             ) -> Optional["PriorsTable"]:
+        """Load every compatible shipped artifact under ``root`` (default:
+        the repo root above this package).  Returns None when nothing
+        usable exists."""
+        if root is None:
+            root = os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__)))))
+        table = cls()
+        for name in PRIOR_ARTIFACTS:
+            path = os.path.join(root, name)
+            try:
+                with open(path) as f:
+                    obj = json.load(f)
+            except (OSError, ValueError):
+                continue
+            if not stamp_compatible(obj.get("meta"), env):
+                continue
+            table.ingest_artifact(obj, source=path)
+            if table.meta is None:
+                table.meta = obj.get("meta")
+        return table if table.records else None
+
+
+_CACHE: Dict[str, Optional[PriorsTable]] = {}
+
+
+def default_priors() -> Optional[PriorsTable]:
+    """The memoized shipped-artifact priors table (or None).  Honors
+    ``REPRO_SF_PRIORS``: ``0`` disables, a path loads from that directory."""
+    env = os.environ.get("REPRO_SF_PRIORS", "").strip()
+    if env in ("0", "false", "no"):
+        return None
+    root = env if env and os.path.isdir(env) else None
+    key = root or "<repo>"
+    if key not in _CACHE:
+        _CACHE[key] = PriorsTable.load(root)
+    return _CACHE[key]
+
+
+def invalidate_priors_cache() -> None:
+    """Drop the memoized table (tests; after regenerating artifacts)."""
+    _CACHE.clear()

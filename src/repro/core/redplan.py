@@ -62,6 +62,19 @@ class ReductionPlan:
             return 1
         return max(int(self.seg_len[: self.nseg_valid].max()), 1)
 
+    def seg_block_candidates(self, max_panel_rows: int = 65536) -> tuple:
+        """Segments-per-block candidates for the blocked segment-reduce
+        kernel: block sizes whose ``(segs_per_block, Lmax)`` gather panel
+        stays within ``max_panel_rows`` rows (the autotuner in
+        :mod:`repro.kernels.tuning` sweeps these)."""
+        S = max(self.nseg, 1)
+        L = self.max_valid_seg_len
+        cands = {min(S, b) for b in (8, 32, 128)}
+        if S <= 1024:
+            cands.add(S)
+        fit = tuple(sorted(b for b in cands if b * L <= max_panel_rows))
+        return fit or (min(S, 8),)
+
     @property
     def duplicate_free(self) -> bool:
         """True when every valid segment has exactly one slot — reductions

@@ -2,14 +2,19 @@
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), wrapped in ops.py,
 oracled in ref.py.  All validated in interpret mode on CPU; compiled by
-Mosaic on real TPUs.
+Mosaic on real TPUs.  The SF hot-path entry points (pack_rows,
+segment_reduce_rows, local_bcast_rows) are autotuned across candidate
+lowerings by tuning.py (see README "Data-driven backend selection &
+autotuning").
 """
 
-from .ops import (default_interpret, flash_attention, pack_rows,
-                  segment_reduce_rows, sf_pack, sf_pack_strided, sf_unpack,
-                  spmv_ell)
-from . import ref
+from .ops import (default_interpret, flash_attention, local_bcast_rows,
+                  pack_rows, segment_reduce_rows, sf_pack, sf_pack_strided,
+                  sf_unpack, spmv_ell)
+from .tuning import compiled_supported, resolve_interpret
+from . import ref, tuning
 
-__all__ = ["default_interpret", "flash_attention", "pack_rows",
+__all__ = ["default_interpret", "resolve_interpret", "compiled_supported",
+           "flash_attention", "local_bcast_rows", "pack_rows",
            "segment_reduce_rows", "sf_pack", "sf_pack_strided", "sf_unpack",
-           "spmv_ell", "ref"]
+           "spmv_ell", "ref", "tuning"]

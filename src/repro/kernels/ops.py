@@ -1,8 +1,17 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to "True unless running on a real TPU", so the same
-call sites validate on CPU (Pallas interpret mode) and compile to Mosaic on
-TPU.  Each wrapper has a pure-jnp oracle in :mod:`repro.kernels.ref`.
+The SF hot-path entry points (``pack_rows``, ``segment_reduce_rows``,
+``local_bcast_rows``) are *autotuned*: each has several candidate lowerings
+(pure-XLA gather/segment ops, the row-per-step DMA kernels, row-blocked
+vectorized kernels at several block sizes, the fused local-exchange kernel)
+and :mod:`repro.kernels.tuning` sweeps them once per problem signature,
+memoizing the winner so repeated exchanges never re-sweep or re-trace.
+
+Interpret-vs-compiled is decided in exactly one place —
+``tuning.resolve_interpret`` (env override ``REPRO_SF_INTERPRET``, then
+platform detection) — shared by these wrappers, the pallas backend, and the
+DistSF general path.  Each wrapper has a pure-jnp oracle in
+:mod:`repro.kernels.ref`.
 """
 
 from __future__ import annotations
@@ -11,73 +20,313 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ref
+from . import ref, tuning
 from .flash_attention import flash_attention as _flash
-from .sf_pack import pack as _pack, pack_strided as _pack_strided
-from .sf_unpack import segment_reduce_sorted, unpack_segments
+from .sf_pack import (bcast_fused as _bcast_fused, pack as _pack,
+                      pack_blocked as _pack_blocked,
+                      pack_strided as _pack_strided)
+from .sf_unpack import (segment_reduce_blocked, segment_reduce_sorted,
+                        unpack_segments)
 from .spmv_ell import spmv_ell as _spmv_ell
+from .tuning import resolve_interpret
 
 __all__ = [
     "default_interpret", "sf_pack", "sf_pack_strided", "sf_unpack",
-    "pack_rows", "segment_reduce_rows",
-    "flash_attention", "spmv_ell", "ref",
+    "pack_rows", "segment_reduce_rows", "local_bcast_rows",
+    "flash_attention", "spmv_ell", "ref", "tuning",
 ]
 
 
 def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Back-compat alias for :func:`repro.kernels.tuning.resolve_interpret`
+    with no explicit override."""
+    return resolve_interpret()
 
 
-def pack_rows(data, idx, *, interpret=None):
-    """``data[idx]`` row gather via the pack kernel for arbitrary unit
-    shapes: rows are ``(*unit)`` dof blocks of any rank and the kernel
-    blocks over the full unit extent — no flattening.  Scalar rows (1-D
-    data) ride as the degenerate one-lane unit ``(1,)``.  Degenerate shapes
-    (no rows, no index, zero-width unit) fall back to ``jnp.take``.  Shared
-    by the pallas backend and the DistSF general path."""
-    data = jnp.asarray(data)
-    unit = data.shape[1:]
+def _platform() -> str:
+    return jax.default_backend()
+
+
+# Per-signature jitted dispatch closures: once the autotuner has picked a
+# winner, repeat calls must cost one jit dispatch — the eager asarray /
+# reshape plumbing around the winner otherwise dominates small exchanges.
+_DISPATCH: dict = {}
+tuning.register_cache(_DISPATCH)
+
+
+# --------------------------------------------------------------------------
+# pack: tuned row gather
+# --------------------------------------------------------------------------
+def _pack_block_sizes(M: int) -> list:
+    cands = {min(M, b) for b in (8, 32, 128, 512)}
+    if M <= 2048:
+        cands.add(M)          # single grid step
+    return sorted(cands)
+
+
+def _pack_candidates(M: int, interpret: bool) -> dict:
+    impls = {"xla": lambda d, i: jnp.take(d, i, axis=0)}
+    for B in _pack_block_sizes(M):
+        impls[f"block:{B}"] = (
+            lambda d, i, B=B: _pack_blocked(d, i, block_rows=B,
+                                            interpret=interpret))
+    # the one-row-per-step DMA kernel: the design of record on TPU, but in
+    # interpret mode its per-step cost makes sweeping it at large M absurd
+    if not interpret or M <= 256:
+        impls["row"] = lambda d, i: _pack(d, i, interpret=interpret)
+    return impls
+
+
+def _pack_default(M: int, interpret: bool) -> str:
+    if interpret:
+        return f"block:{min(M, 128)}"
+    return "row"
+
+
+def pack_rows(data, idx, *, interpret=None, key=None):
+    """``data[idx]`` row gather through the tuned pack lowering for
+    arbitrary unit shapes: rows are ``(*unit)`` dof blocks of any rank and
+    the kernels block over the full unit extent — no flattening.  Scalar
+    rows (1-D data) ride as the degenerate one-lane unit ``(1,)``.
+    Degenerate shapes (no rows, no index, zero-width unit) fall back to
+    ``jnp.take``.  Shared by the pallas backend and the DistSF general path.
+
+    ``key`` (e.g. a plan's ``comm_signature()``) scopes the autotune cache
+    per communication pattern on top of the shape signature.
+    """
+    # the sub-µs signature fast path: attribute lookups only, no jnp calls
+    dshape = data.shape if hasattr(data, "shape") else np.shape(data)
+    idx_shape = idx.shape if hasattr(idx, "shape") else np.shape(idx)
+    dts = np.dtype(getattr(data, "dtype", type(data))).str
+    interpret = resolve_interpret(interpret)
+    sig = ("pack", tuple(dshape), tuple(idx_shape), dts, interpret,
+           _platform(), key)
+    fn = _DISPATCH.get(sig)
+    if fn is None:
+        fn = _pack_dispatch(sig, tuple(dshape), tuple(idx_shape), dts,
+                            interpret)
+        _DISPATCH[sig] = fn
+    return fn(data, idx)
+
+
+def _pack_dispatch(sig, dshape, idx_shape, dts, interpret):
+    """Build (once per signature) the jitted dispatcher around the winning
+    pack lowering — repeat calls cost one jit dispatch."""
+    unit = dshape[1:]
     usize = int(np.prod(unit)) if unit else 1
-    idx_shape = tuple(jnp.shape(idx))
     n_idx = int(np.prod(idx_shape)) if idx_shape else 1
-    if usize == 0 or n_idx == 0 or data.shape[0] == 0:
-        return jnp.take(data, jnp.asarray(idx), axis=0)
-    scalar_rows = data.ndim == 1
-    if scalar_rows:
-        data = data[:, None]
-    out = sf_pack(data, jnp.asarray(idx).reshape(-1), interpret=interpret)
-    if scalar_rows:
-        out = out[:, 0]
-    return out.reshape(idx_shape + tuple(unit))
+    if usize == 0 or n_idx == 0 or dshape[0] == 0:
+        return jax.jit(lambda d, i: jnp.take(d, i, axis=0))
+    scalar_rows = len(dshape) == 1
+    kunit = unit if not scalar_rows else (1,)
+    N, M = int(dshape[0]), n_idx
+    impls = _pack_candidates(M, interpret)
+    winner = tuning.autotune(
+        "pack", (N, M, kunit, dts, interpret, _platform(), sig[-1]), impls,
+        lambda: (jnp.zeros((N,) + kunit, dts),
+                 jnp.arange(M, dtype=jnp.int32) % N),
+        default=_pack_default(M, interpret), work=M * usize)
+    impl = impls[winner]
+
+    @jax.jit
+    def fn(d, i):
+        out = impl(d[:, None] if scalar_rows else d, i.reshape(-1))
+        if scalar_rows:
+            out = out[:, 0]
+        return out.reshape(idx_shape + unit)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# segment reduce: tuned sorted-buffer reduction
+# --------------------------------------------------------------------------
+def _seg_block_sizes(S: int, Lmax: int) -> list:
+    cands = {min(S, b) for b in (8, 32, 128)}
+    if S <= 1024:
+        cands.add(S)          # single grid step
+    return sorted(b for b in cands if b * Lmax <= 65536) or [min(S, 8)]
+
+
+def _seg_candidates(S: int, Lmax: int, op: str, interpret: bool,
+                    have_ids: bool) -> dict:
+    def _padded(vals):
+        pad = jnp.zeros((Lmax,) + vals.shape[1:], vals.dtype)
+        return jnp.concatenate([vals, pad], axis=0)
+
+    impls = {}
+    for SB in _seg_block_sizes(S, Lmax):
+        impls[f"block:{SB}"] = (
+            lambda v, f, l, ids, SB=SB: segment_reduce_blocked(
+                _padded(v), f, l, num_segments=S, Lmax=Lmax,
+                segs_per_block=SB, op=op, interpret=interpret))
+    if not interpret or S <= 256:
+        impls["row"] = lambda v, f, l, ids: segment_reduce_sorted(
+            _padded(v), f, l, num_segments=S, Lmax=Lmax, op=op,
+            interpret=interpret)
+    if have_ids:
+        impls["xla"] = lambda v, f, l, ids: ref.unpack_segment_ref(
+            v, ids, num_segments=S, op=op)
+    return impls
+
+
+def _seg_default(S: int, interpret: bool) -> str:
+    if interpret:
+        return f"block:{min(S, 128)}"
+    return "row"
 
 
 def segment_reduce_rows(sorted_vals, seg_first, seg_len, *, num_segments,
-                        Lmax, op="sum", interpret=None):
-    """Kernel segment-reduce over a sorted row buffer of arbitrary unit
-    shape (the panel blocks over the full unit extent — no flattening);
-    pads ``Lmax`` rows so the last panel load stays in bounds (the pad
-    content is masked out by the per-segment length).  Shared by the pallas
-    backend and the DistSF general path."""
-    interpret = default_interpret() if interpret is None else interpret
-    sorted_vals = jnp.asarray(sorted_vals)
-    scalar_rows = sorted_vals.ndim == 1
-    if scalar_rows:
-        sorted_vals = sorted_vals[:, None]
-    pad = jnp.zeros((Lmax,) + sorted_vals.shape[1:], sorted_vals.dtype)
-    out = segment_reduce_sorted(
-        jnp.concatenate([sorted_vals, pad], axis=0), jnp.asarray(seg_first),
-        jnp.asarray(seg_len), num_segments=num_segments, Lmax=Lmax, op=op,
-        interpret=interpret)
-    return out[:, 0] if scalar_rows else out
+                        Lmax, op="sum", interpret=None, seg_of_slot=None,
+                        key=None):
+    """Tuned segment-reduce over a sorted row buffer of arbitrary unit shape
+    (the panels block over the full unit extent — no flattening); the kernel
+    candidates pad ``Lmax`` rows so the last panel load stays in bounds (the
+    pad content is masked out by the per-segment length).  Shared by the
+    pallas backend and the DistSF general path.
+
+    ``seg_of_slot`` (per-sorted-slot segment ids, when the caller has them)
+    additionally enables the pure-XLA segment-op candidate; ``key`` scopes
+    the autotune cache per communication pattern.
+    """
+    interpret = resolve_interpret(interpret)
+    vshape = sorted_vals.shape if hasattr(sorted_vals, "shape") \
+        else np.shape(sorted_vals)
+    dts = np.dtype(getattr(sorted_vals, "dtype", type(sorted_vals))).str
+    have_ids = seg_of_slot is not None
+    sig = ("segred", tuple(vshape), dts, int(num_segments), int(Lmax), op,
+           have_ids, interpret, _platform(), key)
+    fn = _DISPATCH.get(sig)
+    if fn is None:
+        fn = _segred_dispatch(sig, tuple(vshape), dts, int(num_segments),
+                              int(Lmax), op, have_ids, interpret)
+        _DISPATCH[sig] = fn
+    return fn(sorted_vals, seg_first, seg_len, seg_of_slot)
 
 
+def _segred_dispatch(sig, vshape, dts, S, Lmax, op, have_ids, interpret):
+    """Build (once per signature) the jitted dispatcher around the winning
+    segment-reduce lowering."""
+    scalar_rows = len(vshape) == 1
+    kunit = vshape[1:] if not scalar_rows else (1,)
+    M = int(vshape[0])
+    usize = int(np.prod(kunit)) if kunit else 1
+    impls = _seg_candidates(S, Lmax, op, interpret, have_ids)
+
+    def _synth_args():
+        base, rem = divmod(M, max(S, 1))
+        lens = np.minimum(np.full(S, base, np.int64)
+                          + (np.arange(S) < rem), Lmax)
+        first = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        ids = np.repeat(np.arange(S), lens)
+        ids = np.pad(ids, (0, M - ids.size), constant_values=max(S - 1, 0))
+        return (jnp.zeros((M,) + kunit, dts),
+                jnp.asarray(first, jnp.int32), jnp.asarray(lens, jnp.int32),
+                jnp.asarray(ids, jnp.int32))
+
+    winner = tuning.autotune(
+        "segred", (M, S, Lmax, kunit, dts, op, interpret, have_ids,
+                   _platform(), sig[-1]),
+        impls, _synth_args, default=_seg_default(S, interpret),
+        work=M * usize)
+    impl = impls[winner]
+
+    @jax.jit
+    def fn(v, f, l, ids):
+        out = impl(v[:, None] if scalar_rows else v, f, l, ids)
+        return out[:, 0] if scalar_rows else out
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# fused local exchange: tuned leaf[gl] = root[gr]
+# --------------------------------------------------------------------------
+def _local_candidates(interpret: bool) -> dict:
+    def _xla(root, leaf, gr, gl):
+        return leaf.at[gl].set(jnp.take(root, gr, axis=0).astype(leaf.dtype),
+                               unique_indices=True)
+
+    return {"xla": _xla,
+            "fused": lambda root, leaf, gr, gl: _bcast_fused(
+                root, leaf, gr, gl, interpret=interpret)}
+
+
+def local_bcast_rows(rootdata, leafdata, gr, gl, *, interpret=None,
+                     key=None):
+    """Local-only bcast ``leaf[gl[e]] = root[gr[e]]`` through the tuned
+    fused pack→unpack lowering — self-communication never materializes an
+    intermediate packed buffer (paper §5.2 local/remote split).  ``gl`` must
+    be duplicate-free (each leaf has exactly one root).  Scalar rows ride as
+    the one-lane unit; degenerate shapes fall back to the jnp scatter."""
+    rshape = rootdata.shape if hasattr(rootdata, "shape") \
+        else np.shape(rootdata)
+    lshape = leafdata.shape if hasattr(leafdata, "shape") \
+        else np.shape(leafdata)
+    E = int(np.size(gr))
+    if E == 0:
+        return jnp.asarray(leafdata)
+    interpret = resolve_interpret(interpret)
+    rdts = np.dtype(getattr(rootdata, "dtype", type(rootdata))).str
+    ldts = np.dtype(getattr(leafdata, "dtype", type(leafdata))).str
+    sig = ("localbcast", tuple(rshape), tuple(lshape), rdts, ldts, E,
+           interpret, _platform(), key)
+    fn = _DISPATCH.get(sig)
+    if fn is None:
+        fn = _local_dispatch(sig, tuple(rshape), tuple(lshape), rdts, ldts,
+                             E, interpret)
+        _DISPATCH[sig] = fn
+    return fn(rootdata, leafdata, gr, gl)
+
+
+def _local_dispatch(sig, rshape, lshape, rdts, ldts, E, interpret):
+    """Build (once per signature) the jitted dispatcher around the winning
+    fused local-exchange lowering."""
+    unit = lshape[1:]
+    usize = int(np.prod(unit)) if unit else 1
+    scalar_rows = len(lshape) == 1
+
+    def _scatter(root, leaf, gr, gl):
+        return leaf.at[gl.reshape(-1)].set(
+            jnp.take(root, gr.reshape(-1), axis=0).astype(leaf.dtype),
+            unique_indices=True)
+
+    if usize == 0 or rshape[0] == 0 or lshape[0] == 0:
+        return jax.jit(_scatter)
+    kunit = unit if not scalar_rows else (1,)
+    Nr, Nl = int(rshape[0]), int(lshape[0])
+    impls = _local_candidates(interpret)
+    winner = tuning.autotune(
+        "localbcast", (Nr, Nl, E, kunit, rdts, ldts, interpret, _platform(),
+                       sig[-1]),
+        impls,
+        lambda: (jnp.zeros((Nr,) + kunit, rdts),
+                 jnp.zeros((Nl,) + kunit, ldts),
+                 jnp.arange(E, dtype=jnp.int32) % Nr,
+                 jnp.arange(E, dtype=jnp.int32) % Nl),
+        default="fused" if interpret else "xla", work=E * usize)
+    impl = impls[winner]
+
+    @jax.jit
+    def fn(root, leaf, gr, gl):
+        if scalar_rows:
+            root, leaf = root[:, None], leaf[:, None]
+        out = impl(root, leaf, gr.reshape(-1), gl.reshape(-1))
+        return out[:, 0] if scalar_rows else out
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# direct (untuned) kernel access
+# --------------------------------------------------------------------------
 def sf_pack(data, idx, *, interpret=None):
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     return _pack(data, jnp.asarray(idx), interpret=interpret)
 
 
 def sf_pack_strided(data, *, start, dims, strides, interpret=None):
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     return _pack_strided(data, start=int(start), dims=tuple(int(d) for d in dims),
                          strides=tuple(int(s) for s in strides),
                          interpret=interpret)
@@ -85,7 +334,7 @@ def sf_pack_strided(data, *, start, dims, strides, interpret=None):
 
 def sf_unpack(target, buf_sorted, seg_start, seg_len, seg_dst, *, op="sum",
               interpret=None):
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     return unpack_segments(target, buf_sorted, np.asarray(seg_start),
                            np.asarray(seg_len), np.asarray(seg_dst), op=op,
                            interpret=interpret)
@@ -93,11 +342,11 @@ def sf_unpack(target, buf_sorted, seg_start, seg_len, seg_dst, *, op="sum",
 
 def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
                     block_q=128, block_k=128, interpret=None):
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     return _flash(q, k, v, causal=causal, window=window, scale=scale,
                   block_q=block_q, block_k=block_k, interpret=interpret)
 
 
 def spmv_ell(data, cols, x, *, block_rows=256, interpret=None):
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     return _spmv_ell(data, cols, x, block_rows=block_rows, interpret=interpret)

@@ -19,10 +19,22 @@ Variants:
   * ``pack``          — general index-list pack; one ``(1, *unit)`` block per
                         grid step (pad the innermost dim to a multiple of 128
                         lanes for full-lane DMAs).
+  * ``pack_blocked``  — row-blocked vectorized pack: each grid step gathers
+                        ``block_rows`` rows at once from the resident data
+                        block, so the grid is ``ceil(M / block_rows)`` steps
+                        instead of ``M`` — the launch/step overhead that made
+                        the one-row-per-step variant lose to the XLA gather
+                        amortizes over the whole block.  Which block size (or
+                        whether the XLA gather wins outright) is decided by
+                        the autotuner in :mod:`repro.kernels.tuning`.
   * ``pack_strided``  — paper §5.2 ¶3 parametric 3D-subdomain pack: row
                         addresses are *computed* from (start, dims, strides);
                         no index array exists anywhere, saving the SMEM/HBM
                         footprint of explicit indices.
+  * ``bcast_fused``   — fused pack→unpack for local-only edges (paper §5.2's
+                        local/remote split): ``leaf[gl[e]] = root[gr[e]]`` in
+                        ONE kernel, so self-communication never materializes
+                        an intermediate packed leaf buffer.
 """
 
 from __future__ import annotations
@@ -34,7 +46,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["pack", "pack_strided"]
+from .tuning import resolve_interpret
+
+__all__ = ["pack", "pack_blocked", "pack_strided", "bcast_fused"]
 
 
 def _copy_kernel(*refs):
@@ -43,13 +57,14 @@ def _copy_kernel(*refs):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def pack(data: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = True
+def pack(data: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = None
          ) -> jnp.ndarray:
     """out[i] = data[idx[i]].  data: (N, *unit), idx: (M,) -> out: (M, *unit).
 
     The unit may have any rank >= 1; the block schedule tiles over the full
     unit extent so multi-dim dof blocks move without flattening.
     """
+    interpret = resolve_interpret(interpret)
     M = int(idx.shape[0])
     unit = tuple(int(d) for d in data.shape[1:])
     zeros = (0,) * len(unit)
@@ -68,10 +83,99 @@ def pack(data: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = True
     )(idx.astype(jnp.int32), data)
 
 
+def _blocked_kernel(block_rows: int):
+    def kernel(idx_ref, data_ref, out_ref):
+        i = pl.program_id(0)
+        rows = jax.lax.dynamic_slice(idx_ref[...], (i * block_rows,),
+                                     (block_rows,))
+        out_ref[...] = jnp.take(data_ref[...], rows, axis=0)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def pack_blocked(data: jnp.ndarray, idx: jnp.ndarray, *, block_rows: int,
+                 interpret: bool = None) -> jnp.ndarray:
+    """Row-blocked gather pack: out[i] = data[idx[i]] with ``block_rows``
+    rows per grid step.
+
+    The index list rides in scalar-prefetch SMEM; the data array is resident
+    as one block and each step vector-gathers a ``(block_rows, *unit)`` panel
+    from it — ``ceil(M / block_rows)`` grid steps total, vs ``M`` for the
+    one-row-per-step DMA variant.  ``M`` is padded up to a block multiple
+    (pad rows gather row 0 and are sliced off), so any M works.
+    """
+    interpret = resolve_interpret(interpret)
+    M = int(idx.shape[0])
+    B = max(1, min(int(block_rows), M))
+    G = -(-M // B)
+    Mpad = G * B
+    unit = tuple(int(d) for d in data.shape[1:])
+    zeros = (0,) * len(unit)
+    idx_p = jnp.concatenate(
+        [idx.astype(jnp.int32),
+         jnp.zeros((Mpad - M,), jnp.int32)]) if Mpad > M \
+        else idx.astype(jnp.int32)
+    out = pl.pallas_call(
+        _blocked_kernel(B),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(G,),
+            in_specs=[pl.BlockSpec(data.shape,
+                                   lambda i, idx_ref: (0,) + zeros)],
+            out_specs=pl.BlockSpec((B,) + unit,
+                                   lambda i, idx_ref: (i,) + zeros),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mpad,) + unit, data.dtype),
+        interpret=interpret,
+    )(idx_p, data)
+    return out[:M] if Mpad > M else out
+
+
+def _fused_bcast_kernel(idx_ref, root_ref, leaf_ref, out_ref):
+    vals = jnp.take(root_ref[...], idx_ref[0, :], axis=0)
+    out_ref[...] = leaf_ref[...].at[idx_ref[1, :]].set(
+        vals.astype(leaf_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bcast_fused(rootdata: jnp.ndarray, leafdata: jnp.ndarray,
+                gr: jnp.ndarray, gl: jnp.ndarray, *,
+                interpret: bool = None) -> jnp.ndarray:
+    """Fused local pack→unpack: returns ``leafdata`` with
+    ``out[gl[e]] = rootdata[gr[e]]`` executed as ONE kernel.
+
+    For local-only edges (paper §5.2's local/remote split) the packed
+    intermediate buffer of the two-kernel pack→scatter path is pure waste —
+    here the gather feeds the scatter inside a single grid step, with both
+    index lists in scalar-prefetch SMEM.  Leaf rows not named by ``gl`` pass
+    through unchanged; ``gl`` must be duplicate-free (every leaf has one
+    root), which SF bcasts guarantee.
+    """
+    interpret = resolve_interpret(interpret)
+    unit = tuple(int(d) for d in leafdata.shape[1:])
+    zeros = (0,) * len(unit)
+    idx = jnp.stack([gr.astype(jnp.int32), gl.astype(jnp.int32)], axis=0)
+    return pl.pallas_call(
+        _fused_bcast_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(1,),
+            in_specs=[pl.BlockSpec(rootdata.shape,
+                                   lambda i, idx_ref: (0,) + zeros),
+                      pl.BlockSpec(leafdata.shape,
+                                   lambda i, idx_ref: (0,) + zeros)],
+            out_specs=pl.BlockSpec(leafdata.shape,
+                                   lambda i, idx_ref: (0,) + zeros),
+        ),
+        out_shape=jax.ShapeDtypeStruct(leafdata.shape, leafdata.dtype),
+        interpret=interpret,
+    )(idx, rootdata, leafdata)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("start", "dims", "strides", "interpret"))
 def pack_strided(data: jnp.ndarray, *, start: int, dims, strides,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = None) -> jnp.ndarray:
     """Pack rows ``start + i*sx + j*sy + k*sz`` for (i,j,k) < dims, sx == 1.
 
     ``data`` is ``(N, *unit)`` with any unit rank; each grid step moves one
@@ -81,6 +185,7 @@ def pack_strided(data: jnp.ndarray, *, start: int, dims, strides,
     element-offset indexing (``pl.unblocked``) because panel starts are not
     multiples of the panel height.
     """
+    interpret = resolve_interpret(interpret)
     dx, dy, dz = (int(d) for d in dims)
     sx, sy, sz = (int(s) for s in strides)
     if sx != 1:

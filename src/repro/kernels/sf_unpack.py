@@ -33,7 +33,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["unpack_segments", "segment_reduce_sorted"]
+from .tuning import resolve_interpret
+
+__all__ = ["unpack_segments", "segment_reduce_sorted",
+           "segment_reduce_blocked"]
 
 _INIT = {
     "sum": lambda dt: jnp.zeros((), dt),
@@ -82,7 +85,7 @@ def _make_kernel(op: str, Lmax: int):
                    static_argnames=("num_segments", "Lmax", "op", "interpret"))
 def segment_reduce_sorted(buf: jnp.ndarray, seg_start: jnp.ndarray,
                           seg_len: jnp.ndarray, *, num_segments: int,
-                          Lmax: int, op: str = "sum", interpret: bool = True
+                          Lmax: int, op: str = "sum", interpret: bool = None
                           ) -> jnp.ndarray:
     """Reduce sorted rows into per-segment rows.
 
@@ -94,6 +97,7 @@ def segment_reduce_sorted(buf: jnp.ndarray, seg_start: jnp.ndarray,
     seg_len:   (S,) segment length (<= Lmax).
     Returns (num_segments, *unit).
     """
+    interpret = resolve_interpret(interpret)
     unit = tuple(int(d) for d in buf.shape[1:])
     zeros = (0,) * len(unit)
     meta = jnp.stack([seg_start.astype(jnp.int32),
@@ -115,10 +119,86 @@ def segment_reduce_sorted(buf: jnp.ndarray, seg_start: jnp.ndarray,
     )(meta, buf)
 
 
+def _make_blocked_kernel(op: str, Lmax: int, segs_per_block: int,
+                         unit_rank: int):
+    def kernel(meta_ref, buf_ref, out_ref):
+        # meta_ref: (2, Spad) SMEM — row 0: segment first row, row 1: length.
+        s0 = pl.program_id(0) * segs_per_block
+        first = jax.lax.dynamic_slice(meta_ref[0], (s0,), (segs_per_block,))
+        length = jax.lax.dynamic_slice(meta_ref[1], (s0,), (segs_per_block,))
+        panel = buf_ref[...]
+        dt = panel.dtype
+        lane = jax.lax.broadcasted_iota(jnp.int32, (segs_per_block, Lmax), 1)
+        rows = first[:, None] + lane                 # (SB, Lmax) row gather
+        vals = jnp.take(panel, rows.reshape(-1), axis=0).reshape(
+            (segs_per_block, Lmax) + panel.shape[1:])
+        mask = (lane < length[:, None]).reshape(
+            (segs_per_block, Lmax) + (1,) * unit_rank)
+        masked = jnp.where(mask, vals, _INIT[op](dt))
+        if op == "sum":
+            red = jnp.sum(masked, axis=1)
+        elif op == "prod":
+            red = jnp.prod(masked, axis=1)
+        elif op == "max":
+            red = jnp.max(masked, axis=1)
+        else:
+            red = jnp.min(masked, axis=1)
+        out_ref[...] = red.astype(dt)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "Lmax", "segs_per_block",
+                                    "op", "interpret"))
+def segment_reduce_blocked(buf: jnp.ndarray, seg_start: jnp.ndarray,
+                           seg_len: jnp.ndarray, *, num_segments: int,
+                           Lmax: int, segs_per_block: int, op: str = "sum",
+                           interpret: bool = None) -> jnp.ndarray:
+    """Segment-blocked variant of :func:`segment_reduce_sorted`: each grid
+    step reduces ``segs_per_block`` segments at once from the resident sorted
+    buffer — ``ceil(S / segs_per_block)`` steps instead of ``S``, amortizing
+    the per-step launch cost that dominates when segments are short.
+
+    Same contract as ``segment_reduce_sorted`` (buf padded with >= Lmax
+    rows; returns ``(num_segments, *unit)``).  Which block size wins — or
+    whether the per-segment panel-DMA variant / the XLA segment ops win —
+    is decided by the autotuner in :mod:`repro.kernels.tuning`.
+    """
+    interpret = resolve_interpret(interpret)
+    S = int(num_segments)
+    SB = max(1, min(int(segs_per_block), S))
+    G = -(-S // SB)
+    Spad = G * SB
+    unit = tuple(int(d) for d in buf.shape[1:])
+    zeros = (0,) * len(unit)
+    first = seg_start.astype(jnp.int32)
+    length = seg_len.astype(jnp.int32)
+    if Spad > S:
+        pad = jnp.zeros((Spad - S,), jnp.int32)
+        first = jnp.concatenate([first, pad])
+        length = jnp.concatenate([length, pad])   # len 0 -> emits identity
+    meta = jnp.stack([first, length], axis=0)
+    out = pl.pallas_call(
+        _make_blocked_kernel(op, Lmax, SB, len(unit)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(G,),
+            in_specs=[pl.BlockSpec(buf.shape,
+                                   lambda s, meta_ref: (0,) + zeros)],
+            out_specs=pl.BlockSpec((SB,) + unit,
+                                   lambda s, meta_ref: (s,) + zeros),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Spad,) + unit, buf.dtype),
+        interpret=interpret,
+    )(meta, buf)
+    return out[:S] if Spad > S else out
+
+
 def unpack_segments(target: jnp.ndarray, buf_sorted: jnp.ndarray,
                     seg_start: np.ndarray, seg_len: np.ndarray,
                     seg_dst: np.ndarray, *, op: str = "sum",
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool = None) -> jnp.ndarray:
     """Full unpack: segment-reduce the sorted buffer, then one duplicate-free
     scatter into ``target`` rows ``seg_dst`` with reduction ``op``.
 

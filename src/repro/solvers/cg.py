@@ -100,6 +100,12 @@ def cg_async(matvec: Callable, b: jnp.ndarray,
     ``check_every=0`` for that exact behaviour)."""
     matvec = as_matvec(matvec)
     x = jnp.zeros_like(b) if x0 is None else x0
+    # One eager application before tracing: an SF-backed matvec autotunes
+    # its pack/unpack lowerings on first execution (repro.kernels.tuning),
+    # and running the sweep here keeps setup work out of the fused
+    # while_loop trace — every in-loop exchange dispatches straight to the
+    # memoized winner.
+    jax.block_until_ready(matvec(x))
 
     def run(x, b):
         r = b - matvec(x)

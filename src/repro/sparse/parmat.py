@@ -64,7 +64,7 @@ class ParCSR:
     def __init__(self, nranks: int, row_offsets: np.ndarray,
                  col_offsets: np.ndarray, diag: List[LocalCSR],
                  offd: List[LocalCSR], garray: List[np.ndarray],
-                 dtype=np.float32):
+                 dtype=np.float32, backend=None):
         self.nranks = nranks
         self.row_offsets = np.asarray(row_offsets, dtype=np.int64)
         self.col_offsets = np.asarray(col_offsets, dtype=np.int64)
@@ -85,7 +85,9 @@ class ParCSR:
             sf.set_graph(r, ncols_local, None, remote,
                          nleafspace=max(int(g.size), 1))
         self.sf = sf.setup()
-        self.comm = SFComm(self.sf)
+        # backend=None -> measurement-driven auto-selection (priors table
+        # + tuned Pallas kernels; see repro.core.backend.select_backend)
+        self.comm = SFComm(self.sf, backend=backend)
         self.lvec_offsets = ragged_offsets(
             [self.sf.graph(r).nleafspace for r in range(nranks)])
 
@@ -104,7 +106,7 @@ class ParCSR:
                         cols: np.ndarray, vals: np.ndarray,
                         row_offsets: Optional[np.ndarray] = None,
                         col_offsets: Optional[np.ndarray] = None,
-                        dtype=np.float32) -> "ParCSR":
+                        dtype=np.float32, backend=None) -> "ParCSR":
         if row_offsets is None:
             row_offsets = np.linspace(0, m, nranks + 1).astype(np.int64)
         if col_offsets is None:
@@ -128,7 +130,7 @@ class ParCSR:
                                      vv[~on]))
             garray.append(goff.astype(np.int64))
         return ParCSR(nranks, row_offsets, col_offsets, diag, offd, garray,
-                      dtype=dtype)
+                      dtype=dtype, backend=backend)
 
     @staticmethod
     def from_dmda_stencil(da, coeffs: Optional[Sequence[float]] = None,

@@ -301,3 +301,130 @@ def test_shardmap_backend_conformance_subprocess():
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "SHARDMAP-CONFORMANCE-OK" in r.stdout
+
+
+# -------------------------------------------------- priors-driven selection
+import json
+
+from repro.core import priors as priors_mod
+from repro.core.backend import estimate_message_bytes
+from repro.core.priors import (PriorsTable, current_env, invalidate_priors_cache,
+                               stamp_compatible)
+
+
+def _table(records):
+    t = PriorsTable()
+    for bk, nbytes, us in records:
+        t.record(bk, nbytes, us)
+    return t
+
+
+def test_select_backend_follows_priors():
+    sf = FIXTURES["general0"]()
+    nbytes = estimate_message_bytes(sf)
+    # pallas measured faster at every size -> priors must pick it
+    fast_pallas = _table([("global", nbytes / 2, 100), ("global", nbytes * 2, 200),
+                          ("pallas", nbytes / 2, 10), ("pallas", nbytes * 2, 20)])
+    assert select_backend(sf, priors=fast_pallas) == "pallas"
+    fast_global = _table([("global", nbytes / 2, 10), ("global", nbytes * 2, 20),
+                          ("pallas", nbytes / 2, 100), ("pallas", nbytes * 2, 200)])
+    assert select_backend(sf, priors=fast_global) == "global"
+
+
+def test_select_backend_priors_crossover_uses_message_bytes():
+    """The table can favor different backends at different message sizes —
+    the unit argument moves the lookup point across the crossover."""
+    sf = FIXTURES["general0"]()
+    small = estimate_message_bytes(sf)            # scalar f32 rows
+    big = estimate_message_bytes(sf, unit=(64,))  # 64-lane rows
+    t = _table([("global", small, 10), ("global", big, 300),
+                ("pallas", small, 100), ("pallas", big, 30)])
+    assert select_backend(sf, priors=t) == "global"
+    assert select_backend(sf, priors=t, unit=(64,)) == "pallas"
+
+
+def test_select_backend_single_backend_priors_fall_back():
+    """A table with measurements for only one candidate is no basis for a
+    choice: selection falls back to the static heuristic."""
+    sf = FIXTURES["general0"]()
+    one = _table([("pallas", 100, 1), ("pallas", 1000, 2)])
+    assert one.best_backend(500, candidates=("global", "pallas")) is None
+    assert select_backend(sf, priors=one) == select_backend(
+        sf, priors=PriorsTable())
+
+
+def test_select_backend_hint_beats_priors():
+    sf = FIXTURES["general0"]()
+    t = _table([("global", 10, 1), ("global", 1000, 1),
+                ("pallas", 10, 99), ("pallas", 1000, 99)])
+    assert select_backend(sf, hint="pallas", priors=t) == "pallas"
+
+
+def test_stamp_compatibility():
+    env = current_env()
+    assert stamp_compatible(dict(env))
+    assert not stamp_compatible(None)                       # unstamped
+    assert not stamp_compatible({})
+    bad = dict(env); bad["platform"] = "not-a-platform"
+    assert not stamp_compatible(bad)
+    bad = dict(env); bad["jax_version"] = "0.1.99"
+    assert not stamp_compatible(bad)
+    bad = dict(env); bad["device_count"] = int(env["device_count"]) + 7
+    assert not stamp_compatible(bad)
+    # patch-level jax differences are fine (same major.minor)
+    ok = dict(env)
+    ok["jax_version"] = ".".join(str(env["jax_version"]).split(".")[:2]) + ".999"
+    assert stamp_compatible(ok)
+
+
+def test_priors_load_refuses_incompatible_stamp(tmp_path):
+    """Artifacts from another platform/jax are not trusted as priors."""
+    good = {"bench": "pingpong",
+            "backends": {"global": {"1024": 50.0}, "pallas": {"1024": 5.0}},
+            "meta": current_env()}
+    stale = json.loads(json.dumps(good))
+    stale["meta"]["platform"] = "not-a-platform"
+    (tmp_path / "BENCH_pingpong.json").write_text(json.dumps(stale))
+    assert PriorsTable.load(root=str(tmp_path)) is None
+    (tmp_path / "BENCH_pingpong.json").write_text(json.dumps(good))
+    t = PriorsTable.load(root=str(tmp_path))
+    assert t is not None and t.backends() == {"global", "pallas"}
+    assert t.best_backend(1024, candidates=("global", "pallas")) == "pallas"
+
+
+def test_priors_env_disable(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SF_PRIORS", "0")
+    invalidate_priors_cache()
+    assert priors_mod.default_priors() is None
+    # a directory path loads from there instead of the repo root
+    good = {"bench": "pingpong",
+            "backends": {"global": {"512": 5.0}, "pallas": {"512": 50.0}},
+            "meta": current_env()}
+    (tmp_path / "BENCH_pingpong.json").write_text(json.dumps(good))
+    monkeypatch.setenv("REPRO_SF_PRIORS", str(tmp_path))
+    invalidate_priors_cache()
+    t = priors_mod.default_priors()
+    assert t is not None and t.backends() == {"global", "pallas"}
+    monkeypatch.delenv("REPRO_SF_PRIORS")
+    invalidate_priors_cache()
+
+
+def test_priors_parse_halo_grid_schema():
+    obj = {"bench": "halo",
+           "grids": {"8x8": {"halo_edges": 100,
+                             "backends": {
+                                 "global": {"unit_us": {"1": 30.0, "4": 60.0}},
+                                 "pallas": {"unit_us": {"1": 10.0, "4": 20.0}},
+                                 "auto": {"unit_us": {"1": 9.0}}}}}}
+    t = PriorsTable()
+    added = t.ingest_artifact(obj, source="test")
+    assert added == 4                       # "auto" rows are not priors
+    assert t.backends() == {"global", "pallas"}
+    assert t.best_backend(400, candidates=("global", "pallas")) == "pallas"
+
+
+def test_estimate_message_bytes_scales_with_unit():
+    sf = FIXTURES["general0"]()
+    base = estimate_message_bytes(sf)
+    assert base == sf.nedges_total * 4      # scalar f32 default
+    assert estimate_message_bytes(sf, unit=(8,)) == base * 8
