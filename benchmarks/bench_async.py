@@ -1,16 +1,32 @@
 """Paper Fig 5/9: blocked vs pipelined communication lowering.
 
 Compares the DistSF general lowering with ``sync_mode`` barriers (the
-blocking-MPI behaviour of Fig 5(R)) against the default async lowering where
-XLA is free to overlap the collective with the independent compute placed
-between begin and end (the NVSHMEM end-state).  Runs in a subprocess with 8
-host devices so the main process stays single-device.
+blocking-MPI behaviour of Fig 5(R)) against the default async split-phase
+lowering where XLA is free to overlap the collective with the independent
+compute placed between begin and end (the NVSHMEM end-state).  Runs in a
+subprocess with 8 host devices so the main process stays single-device.
+
+Sweeps the per-rank halo size: small messages are latency-bound (overlap
+hides nearly everything), large messages become bandwidth-bound.  The
+figure-of-merit per size is
+
+    overlap_efficiency = t_sync / t_split
+
+i.e. how much the split-phase formulation buys over blocking barriers at
+that message size (>1 means overlap is winning).  On emulated host devices
+there is no independent progress engine, so efficiencies hover at or below
+1.0 — the artifact records the *shape* of the curve so real-accelerator
+runs have a comparison point.  The sweep lands in ``BENCH_async.json``
+alongside the usual CSV rows.
 """
 
 import os
 import subprocess
 import sys
 import textwrap
+
+# per-rank halo widths (f32 elements); 1<<12 is the historical fixed point
+SIZES = (1 << 8, 1 << 10, 1 << 12, 1 << 14)
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -19,65 +35,97 @@ SCRIPT = textwrap.dedent("""
     import time
     import numpy as np, jax, jax.numpy as jnp
     from repro.core import DistSF, StarForest
-
-    R, n = 8, 1 << 12
-    sf = StarForest(R)
-    for q in range(R):   # ring halo: leaves pull from the left neighbor
-        src_rank = (q - 1) % R
-        sf.set_graph(q, n, None,
-                     np.stack([np.full(n, src_rank), np.arange(n)], 1),
-                     nleafspace=n)
-    sf.setup()
-    mesh = jax.make_mesh((8,), ("sf",))
     from repro.core.distributed import _smap
 
-    def build(sync):
+    R = 8
+
+    def make_sf(n):
+        sf = StarForest(R)
+        for q in range(R):   # ring halo: leaves pull from the left neighbor
+            src_rank = (q - 1) % R
+            sf.set_graph(q, n, None,
+                         np.stack([np.full(n, src_rank), np.arange(n)], 1),
+                         nleafspace=n)
+        sf.setup()
+        return sf
+
+    mesh = jax.make_mesh((8,), ("sf",))
+
+    W = 256          # fixed independent-compute width (<= every root pad
+                     # in the sweep, so the slice below is full-size)
+
+    def build(sf, sync):
         d = DistSF(sf, axis_name="sf", lowering="general", sync_mode=sync)
         def step(roots, leaves, w):
             def inner(r, l, w):
                 pend = d.bcast_begin(r[0], "replace")
-                acc = r[0]
+                acc = r[0][:W]
                 for _ in range(4):           # independent compute to overlap
                     acc = jnp.tanh(acc @ w)
                 l2 = d.bcast_end(pend, l[0])
-                return (l2 + acc)[None]
+                return l2.at[:W].add(acc)[None]
             return _smap(
                 inner, mesh,
                 (jax.sharding.PartitionSpec("sf"),) * 2
                 + (jax.sharding.PartitionSpec(),),
                 jax.sharding.PartitionSpec("sf"))(roots, leaves, w)
-        return jax.jit(step)
+        return jax.jit(step), d
 
-    roots = jnp.asarray(np.random.randn(R, sf.graphs[0].nroots + 1)
-                        .astype(np.float32))
-    leaves = jnp.zeros((R, sf.graphs[0].nleafspace + 1), jnp.float32)
-    dd = DistSF(sf, lowering="general")
-    roots = jnp.asarray(np.random.randn(R, dd.plan.root_pad).astype(np.float32))
-    leaves = jnp.zeros((R, dd.plan.leaf_pad), jnp.float32)
-    w = jnp.asarray(np.random.randn(dd.plan.root_pad, dd.plan.root_pad)
-                    .astype(np.float32) / 100)
+    def time_fn(fn, args, iters=20, reps=3):
+        out = fn(*args); jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+        return best
 
-    for name, sync in [("async", False), ("sync", True)]:
-        fn = build(sync)
-        out = fn(roots, leaves, w); jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(20):
-            out = fn(roots, leaves, w)
-        jax.block_until_ready(out)
-        us = (time.perf_counter() - t0) / 20 * 1e6
-        print(f"CSV,halo_overlap_{{name}},{{us:.1f}},sync={{sync}}")
+    for n in {sizes!r}:
+        sf = make_sf(n)
+        dd = DistSF(sf, lowering="general")
+        rng = np.random.default_rng(0)
+        roots = jnp.asarray(rng.standard_normal((R, dd.plan.root_pad))
+                            .astype(np.float32))
+        leaves = jnp.zeros((R, dd.plan.leaf_pad), jnp.float32)
+        # fixed (W, W) operand: the overlap compute costs the same at every
+        # message size, so only the communication term varies
+        w = jnp.asarray(rng.standard_normal((W, W)).astype(np.float32) / 100)
+        res = {{}}
+        for name, sync in [("split", False), ("sync", True)]:
+            fn, _ = build(sf, sync)
+            res[name] = time_fn(fn, (roots, leaves, w))
+        eff = res["sync"] / res["split"]
+        print(f"CSV,halo_n{{n}}_split,{{res['split']:.1f}},"
+              f"sync_us={{res['sync']:.1f}};overlap_eff={{eff:.2f}}")
 """).format(src=os.path.abspath(os.path.join(os.path.dirname(__file__),
-                                             "..", "src")))
+                                             "..", "src")),
+            sizes=SIZES)
 
 
 def run():
+    from benchmarks.artifacts import artifact_path, write_artifact
+
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=600)
-    rows = []
+    rows, sweep = [], {}
     for line in r.stdout.splitlines():
-        if line.startswith("CSV,"):
-            _, name, us, der = line.split(",", 3)
-            rows.append((name, float(us), der))
+        if not line.startswith("CSV,"):
+            continue
+        _, name, us, der = line.split(",", 3)
+        rows.append((name, float(us), der))
+        # name = halo_n<size>_split; der = sync_us=<..>;overlap_eff=<..>
+        n = int(name.split("_")[1][1:])
+        kv = dict(p.split("=") for p in der.split(";"))
+        sweep[str(n)] = {
+            "split_us": float(us),
+            "sync_us": float(kv["sync_us"]),
+            "overlap_efficiency": float(kv["overlap_eff"]),
+        }
     if not rows:
         rows.append(("halo_overlap_FAILED", 0.0, r.stderr[-200:]))
+        return rows
+    write_artifact(artifact_path("BENCH_async.json"),
+                   {"ranks": 8, "halo_sweep": sweep})
     return rows

@@ -1,0 +1,197 @@
+"""Serving trajectory: SF-routed MoE dispatch + continuous batching.
+
+Three sections, all landing in ``BENCH_serving.json``:
+
+* ``dispatch`` — jitted ``moe_layer`` tokens/sec, SF-routed vs legacy dense
+  dispatch, on prefill- and decode-shaped batches of the two assigned MoE
+  architectures (smoke-scaled, experts raised to E >= 8 so the routed path
+  is exercised at real expert counts: the acceptance bar is SF >= dense
+  there).
+* ``plan_cache`` — eager decode-step loop over mixed batch shapes against a
+  cleared MoE plan cache: repeated steps must HIT the per-signature
+  ``DynPlan`` cache (the whole point of caching capacity plans).
+* ``serving`` — a :class:`repro.serving.engine.ServeEngine` under the
+  open-loop Poisson load of :mod:`repro.serving.loadgen`: tokens/sec,
+  TTFT/TPOT p50/p99, SLO attainment, prefill buckets, program-cache rate.
+
+``run_guard_scenario()`` is the fixed scenario re-measured by
+``benchmarks/perf_guard.py`` (>2x tokens/sec regression vs the committed
+artifact fails CI, stamp-gated like the pack guard).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the perf-guard scenario: fixed forever so committed baselines stay
+# comparable (phi3.5-moe smoke at E=16, decode-shaped batch)
+GUARD_NAME = "sf_dispatch_phi35e16_decode"
+GUARD_BATCH = 8
+
+
+def _moe_cfgs():
+    from repro.configs import get_config
+    kimi = get_config("kimi-k2-1t-a32b").smoke_config().scaled(
+        moe_experts=8, dtype="float32", remat="none")
+    phi = get_config("phi3.5-moe-42b-a6.6b").smoke_config().scaled(
+        moe_experts=16, dtype="float32", remat="none")
+    return [("kimi_e8", kimi), ("phi35_e16", phi)]
+
+
+def _layer_params(cfg, seed=0):
+    from repro.models.moe import init_moe
+    p = init_moe(jax.random.PRNGKey(seed), cfg, 1)
+    return {k: v[0] for k, v in p.items()}
+
+
+def _time_layer(cfg, bp, x, dispatch, iters=30):
+    """Best-of-3 mean us/call for one jitted moe_layer variant."""
+    from repro.models.moe import moe_layer
+    fn = jax.jit(lambda x: moe_layer(x, bp, cfg, dispatch=dispatch)[0])
+    jax.block_until_ready(fn(x))
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(x)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def _time_pair(cfg, bp, x, iters=40, reps=15):
+    """Paired interleaved timing of sf vs dense: both variants run inside
+    every rep (sf block then dense block).  CPU frequency/contention drift
+    hits both sides of each rep equally, so the per-rep *ratio* is stable
+    even when absolute numbers wobble.  Returns (best_sf_us, best_dense_us,
+    median per-rep dense/sf ratio) — the paired median is the honest
+    speedup estimator; the best-of floors are the absolute numbers."""
+    from repro.models.moe import moe_layer
+    fa = jax.jit(lambda x: moe_layer(x, bp, cfg, dispatch="sf")[0])
+    fb = jax.jit(lambda x: moe_layer(x, bp, cfg, dispatch="dense")[0])
+    jax.block_until_ready(fa(x))
+    jax.block_until_ready(fb(x))
+    best_sf = best_dense = float("inf")
+    ratios = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fa(x)
+        jax.block_until_ready(out)
+        t1 = time.perf_counter()
+        for _ in range(iters):
+            out = fb(x)
+        jax.block_until_ready(out)
+        t2 = time.perf_counter()
+        best_sf = min(best_sf, (t1 - t0) / iters * 1e6)
+        best_dense = min(best_dense, (t2 - t1) / iters * 1e6)
+        ratios.append((t2 - t1) / (t1 - t0))
+    return best_sf, best_dense, float(np.median(ratios))
+
+
+def _dispatch_section():
+    shapes = [("prefill", (4, 32)), ("decode", (GUARD_BATCH, 1))]
+    out = {}
+    for cname, cfg in _moe_cfgs():
+        bp = _layer_params(cfg)
+        for sname, (B, S) in shapes:
+            x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                                  jnp.float32)
+            tokens = B * S
+            us_sf, us_dense, ratio = _time_pair(cfg, bp, x)
+            row = {}
+            for mode, us in (("sf", us_sf), ("dense", us_dense)):
+                row[mode] = {"us_per_call": us,
+                             "tokens_per_sec": tokens / (us * 1e-6)}
+            row["sf_over_dense"] = ratio
+            row["experts"] = cfg.moe_experts
+            row["topk"] = cfg.moe_topk
+            out[f"{cname}_{sname}"] = row
+    return out
+
+
+def _plan_cache_section(steps=16):
+    """Eager decode loop: every step consults the MoE plan cache (no outer
+    jit, so cache traffic is per call, exactly like the engine's eager
+    step loop around its jitted programs)."""
+    from repro.models import moe
+    _, cfg = _moe_cfgs()[1]
+    bp = _layer_params(cfg)
+    moe.plan_cache().clear()
+    for b in (4, 8, 8, 4) * (steps // 4):
+        x = jax.random.normal(jax.random.PRNGKey(b), (b, 1, cfg.d_model),
+                              jnp.float32)
+        moe.moe_layer(x, bp, cfg, dispatch="sf")
+    stats = moe.plan_cache().stats()
+    stats["steps"] = steps
+    return stats
+
+
+def _serving_section():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models import moe
+    from repro.serving.engine import ServeEngine
+    from repro.serving.loadgen import LoadSpec, drive, synthesize
+
+    out = {}
+    for name in ("kimi-k2-1t-a32b", "phi3.5-moe-42b-a6.6b"):
+        cfg = get_config(name).smoke_config().scaled(dtype="float32",
+                                                     remat="none")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        moe.plan_cache().clear()
+        eng = ServeEngine(cfg, params, batch=4, s_max=64,
+                          ttft_slo=30.0, tpot_slo=5.0)
+        trace = synthesize(LoadSpec(rate_rps=100.0, n_requests=16,
+                                    prompt_len=(3, 24), max_new=(4, 12),
+                                    vocab=cfg.vocab, seed=0))
+        m = drive(eng, trace)
+        m["moe_plan_cache"] = moe.plan_cache().stats()
+        out[name] = m
+    return out
+
+
+def run_guard_scenario(iters=30):
+    """Tokens/sec of the fixed guard scenario (shared with perf_guard)."""
+    _, cfg = _moe_cfgs()[1]
+    bp = _layer_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (GUARD_BATCH, 1, cfg.d_model),
+                          jnp.float32)
+    us = _time_layer(cfg, bp, x, "sf", iters=iters)
+    return GUARD_BATCH / (us * 1e-6)
+
+
+def run():
+    from benchmarks.artifacts import artifact_path, write_artifact
+    from repro.kernels.tuning import resolve_interpret
+
+    dispatch = _dispatch_section()
+    plan_cache = _plan_cache_section()
+    serving = _serving_section()
+    report = {
+        "dispatch": dispatch,
+        "plan_cache": plan_cache,
+        "serving": serving,
+        "guard": {GUARD_NAME: run_guard_scenario()},
+        "interpret": resolve_interpret(),
+    }
+    write_artifact(artifact_path("BENCH_serving.json"), report)
+
+    rows = []
+    for key, row in dispatch.items():
+        for mode in ("sf", "dense"):
+            rows.append((f"serving_dispatch_{key}_{mode}",
+                         row[mode]["us_per_call"],
+                         f"tok/s={row[mode]['tokens_per_sec']:.0f}"))
+        rows.append((f"serving_dispatch_{key}_ratio", 0.0,
+                     f"sf/dense={row['sf_over_dense']:.2f}x"))
+    rows.append(("serving_plan_cache", 0.0,
+                 f"hit_rate={plan_cache['hit_rate']:.2f}"))
+    for name, m in serving.items():
+        rows.append((f"serving_{name}", 0.0,
+                     f"tok/s={m['tokens_per_sec']:.1f} "
+                     f"ttft_p50={m['ttft_p50_s']:.3f}s "
+                     f"plan_hits={m['moe_plan_cache']['hits']}"))
+    return rows

@@ -1,16 +1,21 @@
-"""CI perf guard for the tuned pack hot path.
+"""CI perf guards for the measured hot paths.
 
-Re-times the tuned ``pack_rows`` lowering on the committed
-``BENCH_kernels.json`` problem (4096×128 f32 rows, 128-row gather) and fails
-(exit 1) when it regresses more than ``THRESHOLD``× against the committed
-baseline — the trajectory gate for exactly the pack-kernel gap this layer
-closed.
+Two gates, both ``THRESHOLD``×-regression checks against committed
+artifacts:
 
-Skips gracefully (exit 0, with a reason) when there is nothing sound to
+* **pack** — re-times the tuned ``pack_rows`` lowering on the committed
+  ``BENCH_kernels.json`` problem (4096×128 f32 rows, 128-row gather), the
+  trajectory gate for exactly the pack-kernel gap this layer closed.
+* **serving** — re-measures the fixed SF-dispatch decode scenario of
+  ``benchmarks/bench_serving.py`` (``run_guard_scenario``) and fails when
+  tokens/sec drops more than ``THRESHOLD``× below the committed
+  ``BENCH_serving.json`` baseline.
+
+Each gate skips gracefully (with a reason) when there is nothing sound to
 compare against: no committed artifact, an artifact without the
 environment stamp, a stamp from another platform/jax/device-count (timings
 are not transferable), or a committed baseline taken in a different
-interpret mode than this run would use.
+interpret mode than this run would use.  Exit 1 if ANY gate fails.
 
 Usage: ``PYTHONPATH=src:. python benchmarks/perf_guard.py``
 """
@@ -49,26 +54,35 @@ def _fresh_pack_us(iters=50) -> float:
     return best
 
 
-def main() -> int:
+def _load_baseline(name: str):
+    """-> (obj, None) for a comparable committed artifact, else
+    (None, skip_reason)."""
     from benchmarks.artifacts import artifact_path
     from repro.core.priors import stamp_compatible
+    from repro.kernels.tuning import resolve_interpret
 
-    path = artifact_path("BENCH_kernels.json")
+    path = artifact_path(name)
     try:
         with open(path) as f:
             obj = json.load(f)
     except (OSError, ValueError):
-        return _skip(f"no committed baseline at {path}")
+        return None, f"no committed baseline at {path}"
     meta = obj.get("meta")
     if not stamp_compatible(meta):
-        return _skip(f"baseline stamp {meta!r} does not match this "
-                     "environment; timings not transferable")
+        return None, (f"baseline stamp {meta!r} does not match this "
+                      "environment; timings not transferable")
+    if bool(obj.get("interpret", True)) != resolve_interpret():
+        return None, "baseline interpret mode differs from this run"
+    return obj, None
+
+
+def guard_pack() -> int:
+    obj, reason = _load_baseline("BENCH_kernels.json")
+    if obj is None:
+        return _skip(reason)
     base = obj.get("timings", {}).get(BASELINE_ROW)
     if not base:
         return _skip(f"baseline has no {BASELINE_ROW!r} timing")
-    from repro.kernels.tuning import resolve_interpret
-    if bool(obj.get("interpret", True)) != resolve_interpret():
-        return _skip("baseline interpret mode differs from this run")
 
     fresh = _fresh_pack_us()
     ratio = fresh / float(base)
@@ -80,6 +94,33 @@ def main() -> int:
         return 1
     print(line + "  OK")
     return 0
+
+
+def guard_serving() -> int:
+    """Tokens/sec gate on the fixed SF-dispatch decode scenario."""
+    from benchmarks.bench_serving import GUARD_NAME, run_guard_scenario
+
+    obj, reason = _load_baseline("BENCH_serving.json")
+    if obj is None:
+        return _skip(reason)
+    base = obj.get("guard", {}).get(GUARD_NAME)
+    if not base:
+        return _skip(f"baseline has no {GUARD_NAME!r} guard scenario")
+
+    fresh = run_guard_scenario()
+    ratio = float(base) / fresh        # >1 means we got SLOWER
+    line = (f"perf-guard: {GUARD_NAME} fresh={fresh:.0f}tok/s "
+            f"baseline={float(base):.0f}tok/s slowdown={ratio:.2f}x "
+            f"(threshold {THRESHOLD}x)")
+    if ratio > THRESHOLD:
+        print(line + "  FAIL")
+        return 1
+    print(line + "  OK")
+    return 0
+
+
+def main() -> int:
+    return max(guard_pack(), guard_serving())
 
 
 if __name__ == "__main__":

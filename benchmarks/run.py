@@ -17,10 +17,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: "
-                         "pingpong,async,cg,meshdist,spmm,kernels,halo")
+                         "pingpong,async,cg,meshdist,spmm,kernels,halo,"
+                         "serving")
     args = ap.parse_args()
     from benchmarks import (bench_async, bench_cg, bench_halo, bench_kernels,
-                            bench_meshdist, bench_pingpong, bench_spmm)
+                            bench_meshdist, bench_pingpong, bench_serving,
+                            bench_spmm)
     suites = {
         "pingpong": bench_pingpong.run,
         "async": bench_async.run,
@@ -29,6 +31,7 @@ def main() -> None:
         "spmm": bench_spmm.run,
         "kernels": bench_kernels.run,
         "halo": bench_halo.run,
+        "serving": bench_serving.run,
     }
     wanted = list(suites) if args.only == "all" else args.only.split(",")
     print("name,us_per_call,derived")

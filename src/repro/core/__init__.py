@@ -27,6 +27,7 @@ from .redplan import ReductionPlan, build_reduction_plan
 from .compose import (compose, compose_inverse, embed_leaves, embed_roots,
                       identity_sf, make_multi_sf)
 from .distributed import DistPending, DistSF, pad_ragged, unpad_ragged
+from .dynplan import DynPlan, PlanCache, star_forest_from_assignment
 from .backend import (GlobalBackend, PallasBackend, SFBackend, SFComm,
                       ShardmapBackend, available_backends, make_backend,
                       register_backend, select_backend)
@@ -43,6 +44,7 @@ __all__ = [
     "compose", "compose_inverse", "embed_leaves", "embed_roots",
     "identity_sf", "make_multi_sf",
     "DistPending", "DistSF", "pad_ragged", "unpad_ragged",
+    "DynPlan", "PlanCache", "star_forest_from_assignment",
     "SFBackend", "SFComm", "GlobalBackend", "ShardmapBackend",
     "PallasBackend", "available_backends", "make_backend",
     "register_backend", "select_backend",

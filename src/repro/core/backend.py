@@ -540,6 +540,14 @@ class SFComm:
     (``REPRO_SF_PRIORS``, ``REPRO_SF_INTERPRET``, ``REPRO_SF_AUTOTUNE``,
     ``REPRO_SF_IMPL_*``, ``REPRO_SF_TUNE_ITERS``) and how to regenerate the
     priors artifacts.
+
+    When the SF topology is *runtime data* rather than setup-time metadata —
+    MoE expert routing, where the router's top-k picks define the edge list
+    every step — use :class:`repro.core.dynplan.DynPlan` instead: same
+    star-forest semantics and tuned kernels, edge list as a traced argument.
+    The README section "MoE routing as a star forest + the serving engine"
+    maps that consumer (``models/moe.py``, ``serving/engine.py``,
+    ``benchmarks/bench_serving.py``) onto this layer.
     """
 
     def __init__(self, sf: StarForest, backend: Optional[str] = None, *,

@@ -1,0 +1,358 @@
+"""Dynamic-index star-forest plans — SF topology built from *runtime* data.
+
+Every plan so far (:mod:`repro.core.plan`) is derived from host-side metadata:
+the edge list is a numpy array fixed at setup time, which is exactly right
+for meshes and halos.  Expert routing breaks that assumption while keeping
+the star-forest *shape* intact: roots are the ``E × C`` capacity-padded
+expert slots, leaves are the per-token top-k picks, and which leaf points at
+which root is decided by the router **every step** — the edge list is a
+traced ``jnp`` array, not setup metadata.
+
+:class:`DynPlan` is the plan family for that case.  The *skeleton* — root
+count, leaf count, payload unit, autotune signature — is static and cached
+(:class:`PlanCache`), so repeated steps reuse the same kernels-and-closures
+machinery PR 3 built for static plans; only the edge list ``leaf_root`` is
+an argument of each operation.  Capacity-drop semantics use the same
+trailing-garbage-row convention as :class:`repro.core.plan.PaddedPlan`:
+``leaf_root[i] == nroots`` marks a dropped edge, its payload lands on a
+drop row that is trimmed before the result is returned.
+
+The root→leaf gather (``bcast``) routes through the autotuned
+:func:`repro.kernels.ops.pack_rows` entry point (dynamic indices are kernel
+arguments, so the tuned lowering applies unchanged) and carries a
+``custom_vjp`` whose backward pass is the transpose scatter-add — the plan
+is usable inside training graphs regardless of which lowering the autotuner
+picked.  Leaf→root reductions are the drop-guarded ``.at[]`` scatter; only
+commutative ops are allowed, because with a runtime edge list there is no
+setup-time sort to make non-commutative reductions deterministic.
+
+``star_forest_from_assignment`` materializes a concrete routing as a real
+:class:`repro.core.graph.StarForest`, which is how the conformance tests pin
+DynPlan semantics to the :class:`repro.core.backend.SFComm` oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import StarForest
+from .mpiops import get_op
+from .unit import UnitSpec, resolve_unit
+from ..kernels import ops as kops
+
+__all__ = ["DynPlan", "PlanCache", "star_forest_from_assignment"]
+
+
+# --------------------------------------------------------------------------
+# plan cache
+# --------------------------------------------------------------------------
+class PlanCache:
+    """Signature-keyed cache for plan skeletons and compiled programs.
+
+    The dynamic-plan analogue of the jitted-dispatch caches in
+    :mod:`repro.kernels.ops`: callers hash the *static* part of a problem
+    (for MoE dispatch: ``(G, T, k, E, C, D, dtype)``; for the serving
+    engine: ``("prefill", bucket)`` / ``("decode", batch)``) and get back
+    the cached plan or executable, so repeated decode steps never re-derive
+    index machinery or re-trace.  Hit/miss counters feed the serving
+    benchmark's plan-cache hit rate.
+    """
+
+    def __init__(self, name: str = "plans"):
+        self.name = name
+        self._entries: Dict[Any, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, key, builder: Callable[[], Any]):
+        try:
+            out = self._entries[key]
+        except KeyError:
+            self.misses += 1
+            out = self._entries[key] = builder()
+            return out
+        self.hits += 1
+        return out
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def keys(self):
+        return list(self._entries)
+
+    def stats(self) -> Dict[str, Any]:
+        total = self.hits + self.misses
+        return {"name": self.name, "entries": len(self._entries),
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": (self.hits / total) if total else 0.0}
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+# --------------------------------------------------------------------------
+# gather with transpose VJP (the bcast hot path)
+# --------------------------------------------------------------------------
+def _make_gather(tune_key) -> Callable:
+    """Row gather ``rootpad[idx]`` through the tuned pack lowering, with the
+    transpose scatter-add as its VJP (Pallas winners have no native
+    differentiation rule; the SF transpose *is* the correct one)."""
+
+    @jax.custom_vjp
+    def gather(rootpad, idx):
+        return kops.pack_rows(rootpad, idx, key=tune_key)
+
+    def fwd(rootpad, idx):
+        # zero-size prototype: carries nrows+dtype through the residuals
+        # (plain dtypes/ints are not valid residual leaves)
+        proto = jnp.zeros((rootpad.shape[0], 0), rootpad.dtype)
+        return gather(rootpad, idx), (idx, proto)
+
+    def bwd(res, g):
+        idx, proto = res
+        grad = jnp.zeros((proto.shape[0],) + g.shape[1:],
+                         proto.dtype).at[idx].add(g.astype(proto.dtype))
+        return grad, np.zeros(idx.shape, dtype=jax.dtypes.float0)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+# unique-writer reduce folds the single contribution into rootdata with the
+# op's binary form (identity-padded gather supplies unwritten roots)
+_COMBINE = {"add": jnp.add, "multiply": jnp.multiply,
+            "max": jnp.maximum, "min": jnp.minimum}
+
+
+# --------------------------------------------------------------------------
+# the dynamic plan
+# --------------------------------------------------------------------------
+class DynPlan:
+    """A star-forest communication plan whose edge list is runtime data.
+
+    Static skeleton: ``nroots`` root slots, ``nleaves`` leaf slots, payload
+    ``unit``.  Each operation takes ``leaf_root`` — a traced ``(nleaves,)``
+    integer array giving the root of every leaf, with ``nroots`` (one past
+    the last root) meaning *dropped* (capacity overflow, unrouted leaf).
+
+    Build once per signature (cache with :class:`PlanCache`) so the tuned
+    gather closure and its autotune key are shared by every step.
+    """
+
+    def __init__(self, nroots: int, nleaves: int, *, unit=None,
+                 label: Any = None):
+        self.nroots = int(nroots)
+        self.nleaves = int(nleaves)
+        self.unit = resolve_unit(unit)
+        self.label = label
+        self.tune_key = ("dynplan", self.nroots, self.nleaves,
+                         self.unit.shape,
+                         None if self.unit.dtype is None
+                         else self.unit.dtype.str, label)
+        self._gather = _make_gather(self.tune_key)
+        self._rep_gathers: Dict[int, Callable] = {}
+
+    def _gather_for_rep(self, rep: int) -> Callable:
+        """Tuned gather closure for the ``leaf_rep``-composed source shape
+        (distinct autotune signature: the row count differs)."""
+        try:
+            return self._rep_gathers[rep]
+        except KeyError:
+            g = self._rep_gathers[rep] = _make_gather(
+                self.tune_key + ("rep", rep))
+            return g
+
+    # ---------------------------------------------------------------- utils
+    def _check_edges(self, leaf_root) -> jnp.ndarray:
+        leaf_root = jnp.asarray(leaf_root)
+        if leaf_root.ndim != 1 or leaf_root.shape[0] != self.nleaves:
+            raise ValueError(
+                f"leaf_root has shape {leaf_root.shape}, plan has "
+                f"{self.nleaves} leaves")
+        return leaf_root
+
+    def valid(self, leaf_root) -> jnp.ndarray:
+        """Boolean mask of connected (non-dropped) leaves."""
+        return self._check_edges(leaf_root) < self.nroots
+
+    # ----------------------------------------------------------------- ops
+    def reduce(self, leafdata, leaf_root, rootdata=None, op="sum",
+               unique: bool = False, leaf_rep: int = 1):
+        """Leaf→root reduction with capacity-drop semantics.
+
+        Dropped edges (``leaf_root == nroots``) accumulate onto the
+        trailing drop row, which is trimmed from the ``(nroots, *unit)``
+        result — they never touch a real root, without any mask multiply on
+        the payload.  Only commutative ops: a runtime edge list has no
+        deterministic setup-time order for ``replace``-style reductions.
+
+        ``unique=True`` asserts each root has at most ONE writer (true by
+        construction for capacity-slot routing, where slot ids never
+        repeat): the reduce then lowers as invert-permutation + row gather
+        — an int32 scatter of writer ids followed by the same tuned gather
+        the bcast path uses — which beats the wide scatter-add the general
+        case needs.  With duplicate writers under ``unique=True`` one
+        arbitrary contributor wins; that is the caller's contract to keep.
+
+        ``leaf_rep=r`` (unique path only) declares that runs of ``r``
+        consecutive leaves carry the SAME payload row: ``leafdata`` has
+        ``nleaves // r`` rows and leaf ``i`` carries row ``i // r``.  This
+        is the ``PetscSFCompose`` shortcut (paper §2.3) for replicated leaf
+        payloads — e.g. MoE dispatch, where each token's row feeds all k of
+        its picks: the inverted writer ids compose with the replication map
+        (``writer // r``) so the payload is gathered straight from the
+        compact token rows, skipping the materialized repeat.
+        """
+        opn = get_op(op)
+        if opn.name not in ("sum", "prod", "max", "min"):
+            raise NotImplementedError(
+                f"DynPlan.reduce supports commutative arithmetic ops "
+                f"(sum/prod/max/min), not {opn.name!r}: a runtime edge "
+                f"list carries no deterministic reduction order")
+        if leaf_rep != 1 and not unique:
+            raise NotImplementedError(
+                "leaf_rep composition requires the unique-writer lowering")
+        leafdata = jnp.asarray(leafdata)
+        leaf_root = self._check_edges(leaf_root)
+        dtype = leafdata.dtype if rootdata is None \
+            else jnp.asarray(rootdata).dtype
+        ident = opn.identity_of(dtype)
+        if unique:
+            if self.nleaves % leaf_rep or \
+                    leafdata.shape[0] * leaf_rep != self.nleaves:
+                raise ValueError(
+                    f"leaf_rep={leaf_rep} needs "
+                    f"{self.nleaves} % rep == 0 and "
+                    f"leafdata rows * rep == nleaves, got "
+                    f"{leafdata.shape[0]} rows")
+            writer = jnp.full((self.nroots + 1,), self.nleaves,
+                              jnp.int32).at[leaf_root].set(
+                jnp.arange(self.nleaves, dtype=jnp.int32))
+            pad = jnp.concatenate(
+                [leafdata.astype(dtype),
+                 jnp.full((1,) + leafdata.shape[1:], ident, dtype)], axis=0)
+            if leaf_rep == 1:
+                got = self._gather(pad, writer[:-1])
+            else:
+                # sentinel nleaves // rep == the pad row, by construction
+                got = self._gather_for_rep(leaf_rep)(
+                    pad, writer[:-1] // leaf_rep)
+            if rootdata is None:
+                return got
+            return _COMBINE[opn.at_update](jnp.asarray(rootdata), got)
+        self.unit.check(leafdata, "leafdata")
+        if rootdata is None:
+            rootdata = jnp.full((self.nroots,) + leafdata.shape[1:], ident,
+                                dtype)
+        rootdata = jnp.asarray(rootdata)
+        # drop row: op identity, so it absorbs dropped payloads and trims
+        drop = jnp.full((1,) + rootdata.shape[1:], ident, rootdata.dtype)
+        buf = jnp.concatenate([rootdata, drop], axis=0)
+        buf = getattr(buf.at[leaf_root], opn.at_update)(
+            leafdata.astype(rootdata.dtype))
+        return buf[:-1]
+
+    def bcast(self, rootdata, leaf_root, leafdata=None):
+        """Root→leaf broadcast (replace).  Dropped edges read the zero drop
+        row when ``leafdata`` is None (fresh buffer), otherwise keep their
+        prior ``leafdata`` value — the static-SF convention for leaves
+        outside the graph."""
+        rootdata = jnp.asarray(rootdata)
+        self.unit.check(rootdata, "rootdata")
+        leaf_root = self._check_edges(leaf_root)
+        rootpad = jnp.concatenate(
+            [rootdata, jnp.zeros((1,) + rootdata.shape[1:],
+                                 rootdata.dtype)], axis=0)
+        out = self._gather(rootpad, leaf_root)
+        if leafdata is not None:
+            leafdata = jnp.asarray(leafdata)
+            ok = (leaf_root < self.nroots).reshape(
+                (-1,) + (1,) * (out.ndim - 1))
+            out = jnp.where(ok, out, leafdata.astype(out.dtype))
+        return out
+
+    def bind(self, leaf_root, unique: bool = False) -> "BoundDynSF":
+        """Fix an edge list, yielding the backend-shaped view that
+        :class:`repro.core.fields.FieldBundle` fuses multi-field exchanges
+        over (``reduce_multi`` with k payloads = ONE drop-guarded
+        scatter).  ``unique`` selects the one-writer-per-root reduce
+        lowering for every reduce issued through the view."""
+        return BoundDynSF(self, self._check_edges(leaf_root), unique=unique)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"DynPlan(nroots={self.nroots}, nleaves={self.nleaves}, "
+                f"label={self.label!r})")
+
+
+@dataclasses.dataclass(frozen=True)
+class _Sizes:
+    """The size surface FieldBundle reads off a StarForest."""
+
+    nroots_total: int
+    nleafspace_total: int
+
+
+class BoundDynSF:
+    """A :class:`DynPlan` with its edge list fixed — duck-types the
+    ``SFComm`` surface that :class:`repro.core.fields.FieldBundle` drives
+    (``.sf`` sizes, ``.unit``, ``.backend.bcast/reduce``), so the fused
+    multi-field exchange machinery works on runtime-routed plans without a
+    second implementation."""
+
+    name = "dyn"
+
+    def __init__(self, plan: DynPlan, leaf_root, unique: bool = False):
+        self.plan = plan
+        self.leaf_root = leaf_root
+        self.unique = unique
+        self.sf = _Sizes(plan.nroots, plan.nleaves)
+        self.backend = self
+        self.unit = UnitSpec()     # fused payloads widen the row unit
+
+    def bcast(self, rootdata, leafdata, op="replace"):
+        if get_op(op).name != "replace":
+            raise NotImplementedError("bound dyn bcast is replace-only")
+        return self.plan.bcast(rootdata, self.leaf_root, leafdata)
+
+    def reduce(self, leafdata, rootdata, op="sum"):
+        return self.plan.reduce(leafdata, self.leaf_root, rootdata, op,
+                                unique=self.unique)
+
+
+# --------------------------------------------------------------------------
+# bridge to the static SF world
+# --------------------------------------------------------------------------
+def star_forest_from_assignment(leaf_root, nroots: int) -> StarForest:
+    """Materialize a concrete (host-side) routing as a 1-rank StarForest.
+
+    ``leaf_root`` is a numpy ``(nleaves,)`` assignment with ``nroots``
+    marking dropped leaves; dropped leaves become *isolated* leaves (holes
+    in the leaf space, paper §3.1).  This is the bridge the conformance
+    tests use to check DynPlan against the SFComm oracle, and the literal
+    statement of "expert routing is a star forest": roots = expert slots,
+    leaves = token picks.
+    """
+    leaf_root = np.asarray(leaf_root, dtype=np.int64)
+    if leaf_root.ndim != 1:
+        raise ValueError("leaf_root must be 1-D")
+    if leaf_root.size and (leaf_root.min() < 0
+                           or leaf_root.max() > int(nroots)):
+        raise ValueError(f"leaf_root entries must lie in [0, {nroots}] "
+                         f"(== {nroots} marks a dropped leaf)")
+    connected = np.flatnonzero(leaf_root < int(nroots))
+    remote = np.stack([np.zeros(connected.size, np.int64),
+                       leaf_root[connected]], axis=1)
+    sf = StarForest(1)
+    sf.set_graph(0, int(nroots), connected, remote,
+                 nleafspace=int(leaf_root.size))
+    return sf.setup()

@@ -71,8 +71,9 @@ def _pack_candidates(M: int, interpret: bool) -> dict:
             lambda d, i, B=B: _pack_blocked(d, i, block_rows=B,
                                             interpret=interpret))
     # the one-row-per-step DMA kernel: the design of record on TPU, but in
-    # interpret mode its per-step cost makes sweeping it at large M absurd
-    if not interpret or M <= 256:
+    # interpret mode each grid step pays python-interpreter cost, so beyond
+    # a handful of rows it can only win a sweep by measurement noise
+    if not interpret or M <= 32:
         impls["row"] = lambda d, i: _pack(d, i, interpret=interpret)
     return impls
 

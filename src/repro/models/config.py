@@ -30,6 +30,7 @@ class ModelConfig:
     moe_dff: int = 0             # per-expert hidden dim
     moe_capacity: float = 1.25
     moe_shared_ff: int = 0       # shared-expert hidden dim (0 = none)
+    moe_dispatch: str = "sf"     # sf (star-forest routed) | dense
     # hybrid / ssm
     ssm_state: int = 0
     ssm_heads: int = 0

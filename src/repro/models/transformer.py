@@ -250,11 +250,27 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None,
     return cache
 
 
+def _last_x(x, last_pos):
+    """Gather the per-row last *real* position from (B, S, D) activations —
+    right-padded (length-bucketed) prompts read their logits at ``plen - 1``
+    rather than at the pad tail."""
+    if last_pos is None:
+        return x[:, -1:]
+    lp = jnp.asarray(last_pos, jnp.int32)
+    return x[jnp.arange(x.shape[0]), lp][:, None]
+
+
 def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
-            enc_embeds=None, s_max: Optional[int] = None
+            enc_embeds=None, s_max: Optional[int] = None,
+            last_pos: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Dict]:
     """Full-sequence forward that also returns decode caches.
-    -> (logits of last position (B, V), cache)."""
+    -> (logits of last position (B, V), cache).
+
+    ``last_pos`` (B,) selects a per-row logit position for right-padded
+    prompts (causal masking keeps real positions numerically unaffected by
+    the pad tail; KV rows past ``last_pos`` hold pad junk that decode
+    overwrites before its mask ever exposes them)."""
     x = embeds if embeds is not None else jnp.take(params["embed"], tokens,
                                                    axis=0)
     B, S, D = x.shape
@@ -265,7 +281,7 @@ def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             y, st = xlstm_pair_scan(x, pp, cfg, st)
             return y, st
         x, states = jax.lax.scan(body, x, params["pairs"])
-        logits = _head(params, cfg, x[:, -1:])[:, 0]
+        logits = _head(params, cfg, _last_x(x, last_pos))[:, 0]
         return logits, {"pairs": states, "pos": jnp.asarray(S, jnp.int32)}
 
     enc_out = None
@@ -322,7 +338,7 @@ def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
         cache["h"] = outs["h"]
     if cfg.cross_attention:
         cache["ck"], cache["cv"] = outs["ck"], outs["cv"]
-    logits = _head(params, cfg, x[:, -1:])[:, 0]
+    logits = _head(params, cfg, _last_x(x, last_pos))[:, 0]
     return logits, cache
 
 

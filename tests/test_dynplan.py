@@ -1,0 +1,188 @@
+"""DynPlan: runtime-routed star-forest plans vs the SFComm oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DynPlan, PlanCache, star_forest_from_assignment
+from repro.core.backend import SFComm
+
+NROOTS, NLEAVES = 7, 12
+
+
+@pytest.fixture(scope="module")
+def routing():
+    """A fixed assignment with duplicates (roots 0 and 3 have two writers),
+    unrouted roots (5, 6), and two dropped leaves (== NROOTS)."""
+    rng = np.random.default_rng(7)
+    lr = np.array([0, 3, 1, 4, 0, 2, 3, NROOTS, 1, 2, NROOTS, 4])
+    data = rng.standard_normal((NLEAVES, 3)).astype(np.float32)
+    root0 = rng.standard_normal((NROOTS, 3)).astype(np.float32)
+    return lr, data, root0
+
+
+def _oracle(lr):
+    return SFComm(star_forest_from_assignment(lr, NROOTS), backend="global")
+
+
+def test_reduce_matches_sfcomm_oracle(routing):
+    lr, data, root0 = routing
+    plan = DynPlan(NROOTS, NLEAVES)
+    for op in ("sum", "max", "min"):
+        got = plan.reduce(jnp.asarray(data), jnp.asarray(lr),
+                          jnp.asarray(root0), op=op)
+        want = _oracle(lr).reduce(jnp.asarray(data), jnp.asarray(root0),
+                                  op=op)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6, err_msg=op)
+
+
+def test_bcast_matches_sfcomm_oracle(routing):
+    lr, data, root0 = routing
+    plan = DynPlan(NROOTS, NLEAVES)
+    # keep-prior convention: dropped leaves keep their leafdata value
+    got = plan.bcast(jnp.asarray(root0), jnp.asarray(lr), jnp.asarray(data))
+    want = _oracle(lr).bcast(jnp.asarray(root0), jnp.asarray(data))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_drop_semantics(routing):
+    """Dropped leaves never touch a root; fresh-buffer bcast reads zeros."""
+    lr, data, _ = routing
+    plan = DynPlan(NROOTS, NLEAVES)
+    base = plan.reduce(jnp.asarray(data), jnp.asarray(lr), op="sum")
+    poisoned = data.copy()
+    poisoned[lr == NROOTS] = 1e6          # huge payload on dropped leaves
+    got = plan.reduce(jnp.asarray(poisoned), jnp.asarray(lr), op="sum")
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+    out = plan.bcast(jnp.zeros((NROOTS, 3)) + 5.0, jnp.asarray(lr))
+    np.testing.assert_array_equal(np.asarray(out)[lr == NROOTS], 0.0)
+    assert np.asarray(plan.valid(jnp.asarray(lr))).sum() == NLEAVES - 2
+
+
+def test_unique_lowering_matches_general(routing):
+    """One-writer-per-root routing: the invert-permutation lowering must be
+    bit-identical to the general scatter reduce, with and without
+    rootdata."""
+    _, data, root0 = routing
+    # a permutation-like assignment: every root written at most once
+    lr = np.array([4, 0, NROOTS, 2, 6, NROOTS, 1, 5, NROOTS, 3, NROOTS,
+                   NROOTS])
+    plan = DynPlan(NROOTS, NLEAVES)
+    for rd in (None, jnp.asarray(root0)):
+        a = plan.reduce(jnp.asarray(data), jnp.asarray(lr), rd, op="sum")
+        b = plan.reduce(jnp.asarray(data), jnp.asarray(lr), rd, op="sum",
+                        unique=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_leaf_rep_composed_matches_repeat():
+    """leaf_rep composition (the SFCompose shortcut for replicated leaf
+    payloads): gathering from compact token rows must equal reducing the
+    materialized k-way repeat, in both value and gradient."""
+    rng = np.random.default_rng(3)
+    ntok, rep = 6, 2
+    nleaves = ntok * rep
+    lr = np.array([4, 0, NROOTS, 2, 6, NROOTS, 1, 5, NROOTS, 3, NROOTS,
+                   NROOTS])
+    plan = DynPlan(NROOTS, nleaves)
+    tok = rng.standard_normal((ntok, 3)).astype(np.float32)
+    full = np.repeat(tok, rep, axis=0)
+    a = plan.reduce(jnp.asarray(full), jnp.asarray(lr), op="sum",
+                    unique=True)
+    b = plan.reduce(jnp.asarray(tok), jnp.asarray(lr), op="sum",
+                    unique=True, leaf_rep=rep)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    ga = jax.grad(lambda d: jnp.sum(plan.reduce(
+        jnp.repeat(d, rep, axis=0), jnp.asarray(lr), op="sum",
+        unique=True) ** 2))(jnp.asarray(tok))
+    gb = jax.grad(lambda d: jnp.sum(plan.reduce(
+        d, jnp.asarray(lr), op="sum", unique=True,
+        leaf_rep=rep) ** 2))(jnp.asarray(tok))
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                               rtol=1e-6, atol=1e-6)
+
+    with pytest.raises(NotImplementedError):
+        plan.reduce(jnp.asarray(tok), jnp.asarray(lr), op="sum",
+                    leaf_rep=rep)
+    with pytest.raises(ValueError):
+        plan.reduce(jnp.asarray(tok[:-1]), jnp.asarray(lr), op="sum",
+                    unique=True, leaf_rep=rep)
+
+
+def test_grad_through_bcast_and_reduce(routing):
+    """The custom-VJP gather must carry the SF-transpose gradient (bcast
+    grad = reduce, reduce grad = bcast) under jit."""
+    lr, data, root0 = routing
+    plan = DynPlan(NROOTS, NLEAVES)
+    lrj = jnp.asarray(lr)
+
+    @jax.jit
+    def loss(r):
+        return jnp.sum(plan.bcast(r, lrj) ** 2)
+
+    g = jax.grad(loss)(jnp.asarray(root0))
+    leaves = plan.bcast(jnp.asarray(root0), lrj)
+    want = plan.reduce(2.0 * leaves, lrj, op="sum")
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+    @jax.jit
+    def loss2(d):
+        return jnp.sum(plan.reduce(d, lrj, op="sum", unique=False))
+
+    g2 = jax.grad(loss2)(jnp.asarray(data))
+    # d(sum of roots)/d(leaf) = 1 for connected leaves, 0 for dropped
+    np.testing.assert_allclose(
+        np.asarray(g2), (lr < NROOTS)[:, None] * np.ones_like(data))
+
+
+def test_plan_cache_counters():
+    cache = PlanCache("t")
+    built = []
+    for sig in [(1, 2), (3, 4), (1, 2), (1, 2)]:
+        cache.get_or_build(sig, lambda s=sig: built.append(s) or s)
+    assert built == [(1, 2), (3, 4)]
+    assert (cache.hits, cache.misses, len(cache)) == (2, 2, 2)
+    assert cache.stats()["hit_rate"] == 0.5
+    assert (1, 2) in cache and (9, 9) not in cache
+    cache.clear()
+    assert (cache.hits, cache.misses, len(cache)) == (0, 0, 0)
+
+
+def test_edge_validation():
+    plan = DynPlan(NROOTS, NLEAVES)
+    with pytest.raises(ValueError):
+        plan.reduce(jnp.zeros((NLEAVES, 3)), jnp.zeros((3,), jnp.int32))
+    with pytest.raises(NotImplementedError):
+        plan.reduce(jnp.zeros((NLEAVES, 3)),
+                    jnp.zeros((NLEAVES,), jnp.int32), op="replace")
+    with pytest.raises(ValueError):
+        star_forest_from_assignment(np.array([0, NROOTS + 1]), NROOTS)
+
+
+def test_fieldbundle_fuses_over_bound_plan(routing):
+    """FieldBundle over a bound DynPlan: the fused two-field reduce equals
+    two separate reduces (and exercises the BoundDynSF duck-type)."""
+    from repro.core.fields import FieldBundle
+    lr, data, _ = routing
+    plan = DynPlan(NROOTS, NLEAVES)
+    w = np.abs(data[:, :1]) + 0.5
+    bound = plan.bind(jnp.asarray(lr))
+    fb = FieldBundle.for_data(bound, [jnp.asarray(data), jnp.asarray(w)])
+    got_x, got_w = fb.reduce_multi(
+        [jnp.asarray(data), jnp.asarray(w)],
+        [jnp.zeros((NROOTS, 3)), jnp.zeros((NROOTS, 1))], op="sum")
+    np.testing.assert_allclose(
+        np.asarray(got_x),
+        np.asarray(plan.reduce(jnp.asarray(data), jnp.asarray(lr),
+                               jnp.zeros((NROOTS, 3)), op="sum")),
+        rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(got_w),
+        np.asarray(plan.reduce(jnp.asarray(w), jnp.asarray(lr),
+                               jnp.zeros((NROOTS, 1)), op="sum")),
+        rtol=1e-6)

@@ -66,3 +66,63 @@ def test_eos_stops_early(setup):
     r = Request(1, [1, 2, 3], max_new=8)
     eng2.run([r])
     assert r.out[-1] == eos and len(r.out) <= 8
+
+
+def test_eos_mid_batch_frees_slot_others_continue(setup):
+    """One request hitting eos mid-batch must not perturb its neighbor,
+    and its freed slot must admit the next queued request."""
+    cfg, params = setup
+    probe = Request(0, [1, 2, 3], max_new=8)
+    ServeEngine(cfg, params, batch=2, s_max=64).run([probe])
+    eos = probe.out[2]          # [1,2,3] dies after 3 tokens under this eos
+
+    solo = Request(0, [9, 8, 7], max_new=8)
+    ServeEngine(cfg, params, batch=2, s_max=64, eos_id=eos).run([solo])
+
+    eng = ServeEngine(cfg, params, batch=2, s_max=64, eos_id=eos)
+    early = Request(1, [1, 2, 3], max_new=8)      # stops at 3
+    longr = Request(2, [9, 8, 7], max_new=8)      # keeps going
+    queued = Request(3, [1, 2, 3], max_new=8)     # admitted into 1's slot
+    eng.run([early, longr, queued])
+    assert early.done and early.out[-1] == eos and len(early.out) < 8
+    assert longr.out == solo.out
+    assert queued.done and queued.out == early.out
+
+
+def test_slot_reuse_queue_drain_and_metrics(setup):
+    """More requests than slots: every slot is reused, the queue drains,
+    and the engine's service metrics account for all of it."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch=2, s_max=64,
+                      ttft_slo=60.0, tpot_slo=60.0)
+    reqs = [Request(i, [1 + i, 2, 3 + (i % 3)], max_new=3 + i % 2)
+            for i in range(7)]
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    assert eng.queue == [] and all(s is None for s in eng.active)
+    m = eng.metrics()
+    assert m["requests_finished"] == 7
+    assert m["tokens_generated"] == sum(len(r.out) for r in reqs)
+    assert m["decode_steps"] > 0 and m["tokens_per_sec"] > 0
+    assert m["ttft_p50_s"] > 0 and m["tpot_p50_s"] > 0
+    assert m["ttft_slo_attainment"] == 1.0  # generous SLO on a smoke model
+    assert m["program_cache"]["hits"] > 0
+
+
+def test_prefill_bucketing_bounds_program_cache(setup):
+    """Varied prompt lengths must compile one prefill program per pow2
+    bucket (not per length) and still match the unbucketed engine."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch=2, s_max=64)
+    lens = [3, 5, 6, 7, 9, 11, 13, 17, 19, 23]
+    reqs = [Request(i, list(range(1, n + 1)), max_new=4)
+            for i, n in enumerate(lens)]
+    eng.run(reqs)
+    buckets = eng.metrics()["prefill_buckets"]
+    assert buckets == [4, 8, 16, 32]          # 10 lengths -> 4 programs
+    ref = ServeEngine(cfg, params, batch=2, s_max=64, bucket_prompts=False)
+    ref_reqs = [Request(i, list(range(1, n + 1)), max_new=4)
+                for i, n in enumerate(lens)]
+    ref.run(ref_reqs)
+    assert [r.out for r in reqs] == [r.out for r in ref_reqs]
+    assert len(ref.metrics()["prefill_buckets"]) == len(set(lens))
