@@ -1,0 +1,191 @@
+"""DDP bucketed gradient exchange: fused buckets vs per-tensor reduces.
+
+Three sections, all landing in ``BENCH_ddp.json``:
+
+* ``reduce`` — eager (dispatch-bound) time of one full gradient allreduce,
+  bucketed (:meth:`repro.training.ddp.DDPGradReducer.allreduce`, one fused
+  ``reduce_multi`` per bucket) vs the per-tensor reference
+  (:meth:`~repro.training.ddp.DDPGradReducer.reduce_per_tensor`, one SF
+  reduce per leaf), at several byte budgets on two model shapes: a deep
+  stack of many small tensors (where fusion collapses ~50 dispatches into
+  a handful) and a shallow stack of large tensors (where payload, not
+  dispatch, dominates).  Timing is paired/interleaved so machine drift
+  cancels in the per-rep ratio; the acceptance bar is fused >= per-tensor
+  (ratio >= 1) at EVERY budget.
+* ``replan`` — elastic re-plan cost: wall time to construct a
+  :class:`~repro.training.ddp.DDPGradReducer` against a COLD plan cache
+  (the shrink/grow-to-an-unseen-world case, SF + bundles re-derived) vs a
+  WARM one (revisited world, pure cache hits) for a shrink/grow/return
+  world sequence.
+* ``guard`` — the fixed scenario re-measured by
+  ``benchmarks/perf_guard.py`` (>2x regression of the bucketed reduce
+  fails CI, stamp-gated like the other guards).
+"""
+
+import statistics
+import time
+
+import jax
+import numpy as np
+
+# the perf-guard scenario: fixed forever so committed baselines stay
+# comparable (deep small-tensor stack, quarter-total budget, grains=4)
+GUARD_NAME = "ddp_bucketed_reduce_deep24_q4"
+GUARD_WORLD = 4
+GRAINS = 4
+
+
+def _deep_tree(layers=24, width=64, seed=0):
+    """Many small tensors: 2*layers leaves, ~(width*width*4)B each."""
+    rng = np.random.default_rng(seed)
+    return {f"layer_{i:02d}": {
+        "w": rng.standard_normal((width, width)).astype(np.float32),
+        "b": rng.standard_normal((width,)).astype(np.float32)}
+        for i in range(layers)}
+
+
+def _wide_tree(layers=12, width=128, seed=1):
+    """Fewer, larger tensors (64 KiB each vs the deep stack's 16 KiB)."""
+    rng = np.random.default_rng(seed)
+    return {f"block_{i}": {
+        "w": rng.standard_normal((width, width)).astype(np.float32)}
+        for i in range(layers)}
+
+
+def _total_bytes(tree):
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def _grain_grads(tree, grains=GRAINS, seed=2):
+    rng = np.random.default_rng(seed)
+    return jax.tree_util.tree_map(
+        lambda x: jax.numpy.asarray(
+            rng.standard_normal((grains,) + x.shape).astype(x.dtype)), tree)
+
+
+def _block(fn, gg, iters):
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(gg)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _time_pair(fused_fn, pt_fn, gg, iters=8, reps=9):
+    """Paired interleaved eager timing: both variants inside every rep, so
+    drift hits both sides equally.  Returns (best_fused_us, best_pt_us,
+    median per-rep pt/fused ratio) — ratio > 1 means fused is faster."""
+    jax.block_until_ready(jax.tree_util.tree_leaves(fused_fn(gg)))
+    jax.block_until_ready(jax.tree_util.tree_leaves(pt_fn(gg)))
+    best_f = best_p = float("inf")
+    ratios = []
+    for _ in range(reps):
+        f = _block(fused_fn, gg, iters)
+        p = _block(pt_fn, gg, iters)
+        best_f, best_p = min(best_f, f), min(best_p, p)
+        ratios.append(p / f)
+    return best_f, best_p, statistics.median(ratios)
+
+
+def _budgets(total):
+    """Budgets that actually exercise fusion on both model shapes: a
+    quarter, half, and all of the payload (None = single fused bucket)."""
+    return [("q4", total // 4), ("q2", total // 2), ("all", None)]
+
+
+def _reduce_section():
+    from repro.core.dynplan import PlanCache
+    from repro.training.ddp import BucketPlan, DDPGradReducer
+
+    out = {}
+    for mname, tree in [("deep24x64", _deep_tree()),
+                        ("wide12x128", _wide_tree())]:
+        total = _total_bytes(tree)
+        gg = _grain_grads(tree)
+        for bname, budget in _budgets(total):
+            plan = BucketPlan.for_tree(tree, budget)
+            red = DDPGradReducer(plan, world=GUARD_WORLD, grains=GRAINS,
+                                 cache=PlanCache("bench"))
+            f, p, ratio = _time_pair(
+                lambda g, r=red: r.allreduce(g),
+                lambda g, r=red: r.reduce_per_tensor(g), gg)
+            out[f"{mname}_{bname}"] = {
+                "fused_us": f, "per_tensor_us": p, "speedup": ratio,
+                "nbuckets": plan.nbuckets,
+                "nleaves": plan.nleaves,
+                "byte_budget": budget, "total_bytes": total,
+            }
+    return out
+
+
+def _replan_section():
+    """Cold (unseen world) vs warm (revisited world) reducer construction
+    over a shrink/grow sequence — the elastic restart cost."""
+    from repro.core.dynplan import PlanCache
+    from repro.training.ddp import BucketPlan, DDPGradReducer
+
+    tree = _deep_tree()
+    plan = BucketPlan.for_tree(tree, _total_bytes(tree) // 4)
+    cache = PlanCache("bench-replan")
+    grains = 8
+    out = {}
+    for tag, world in [("cold_w2", 2), ("shrinkcold_w4", 4),
+                       ("growwarm_w2", 2), ("warm_w4", 4)]:
+        t0 = time.perf_counter()
+        DDPGradReducer(plan, world=world, grains=grains, cache=cache)
+        out[tag] = {"us": (time.perf_counter() - t0) * 1e6,
+                    "world": world, **cache.stats()}
+    # warm revisits must be pure hits (no re-derivation)
+    assert out["warm_w4"]["misses"] == out["growwarm_w2"]["misses"] == \
+        out["shrinkcold_w4"]["misses"]
+    return out
+
+
+def run_guard_scenario(iters=8, reps=7):
+    """us/call of the fixed bucketed-reduce scenario (shared with
+    perf_guard)."""
+    from repro.core.dynplan import PlanCache
+    from repro.training.ddp import BucketPlan, DDPGradReducer
+
+    tree = _deep_tree()
+    plan = BucketPlan.for_tree(tree, _total_bytes(tree) // 4)
+    red = DDPGradReducer(plan, world=GUARD_WORLD, grains=GRAINS,
+                         cache=PlanCache("guard"))
+    gg = _grain_grads(tree)
+    fn = lambda g: red.allreduce(g)  # noqa: E731
+    jax.block_until_ready(jax.tree_util.tree_leaves(fn(gg)))
+    return min(_block(fn, gg, iters) for _ in range(reps))
+
+
+def run():
+    from benchmarks.artifacts import artifact_path, write_artifact
+
+    reduce_sec = _reduce_section()
+    replan = _replan_section()
+    report = {
+        "reduce": reduce_sec,
+        "replan": replan,
+        "guard": {GUARD_NAME: run_guard_scenario()},
+        "grains": GRAINS,
+        "world": GUARD_WORLD,
+    }
+    write_artifact(artifact_path("BENCH_ddp.json"), report)
+
+    rows = []
+    for key, r in reduce_sec.items():
+        rows.append((f"ddp_reduce_{key}_fused", r["fused_us"],
+                     f"x{r['speedup']:.2f}_vs_per_tensor_"
+                     f"{r['nbuckets']}buckets"))
+        rows.append((f"ddp_reduce_{key}_per_tensor", r["per_tensor_us"],
+                     f"{r['nleaves']}leaves"))
+    for tag, r in replan.items():
+        rows.append((f"ddp_replan_{tag}", r["us"],
+                     f"w{r['world']}_h{r['hits']}m{r['misses']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

@@ -1,6 +1,6 @@
 """CI perf guards for the measured hot paths.
 
-Two gates, both ``THRESHOLD``×-regression checks against committed
+Three gates, all ``THRESHOLD``×-regression checks against committed
 artifacts:
 
 * **pack** — re-times the tuned ``pack_rows`` lowering on the committed
@@ -10,6 +10,10 @@ artifacts:
   ``benchmarks/bench_serving.py`` (``run_guard_scenario``) and fails when
   tokens/sec drops more than ``THRESHOLD``× below the committed
   ``BENCH_serving.json`` baseline.
+* **ddp** — re-measures the fixed bucketed-gradient-reduce scenario of
+  ``benchmarks/bench_ddp.py`` (deep 24-layer stack, quarter-total byte
+  budget) and fails when us/call regresses more than ``THRESHOLD``× vs
+  the committed ``BENCH_ddp.json`` baseline.
 
 Each gate skips gracefully (with a reason) when there is nothing sound to
 compare against: no committed artifact, an artifact without the
@@ -119,8 +123,31 @@ def guard_serving() -> int:
     return 0
 
 
+def guard_ddp() -> int:
+    """us/call gate on the fixed bucketed-gradient-reduce scenario."""
+    from benchmarks.bench_ddp import GUARD_NAME, run_guard_scenario
+
+    obj, reason = _load_baseline("BENCH_ddp.json")
+    if obj is None:
+        return _skip(reason)
+    base = obj.get("guard", {}).get(GUARD_NAME)
+    if not base:
+        return _skip(f"baseline has no {GUARD_NAME!r} guard scenario")
+
+    fresh = run_guard_scenario()
+    ratio = fresh / float(base)        # >1 means we got SLOWER
+    line = (f"perf-guard: {GUARD_NAME} fresh={fresh:.0f}us "
+            f"baseline={float(base):.0f}us slowdown={ratio:.2f}x "
+            f"(threshold {THRESHOLD}x)")
+    if ratio > THRESHOLD:
+        print(line + "  FAIL")
+        return 1
+    print(line + "  OK")
+    return 0
+
+
 def main() -> int:
-    return max(guard_pack(), guard_serving())
+    return max(guard_pack(), guard_serving(), guard_ddp())
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ from .graph import RankGraph, StarForest, ragged_offsets
 from .mpiops import Op, get_op
 from .unit import UnitSpec, resolve_unit
 from .ops import PendingComm, SFOps
-from .fields import FieldBundle, FieldSpec
+from .fields import FieldBundle, FieldSpec, PendingMulti
 from .plan import GlobalPlan, PaddedPlan, build_global_plan, build_padded_plan
 from .redplan import ReductionPlan, build_reduction_plan
 from .compose import (compose, compose_inverse, embed_leaves, embed_roots,
@@ -37,7 +37,7 @@ __all__ = [
     "RankGraph", "StarForest", "ragged_offsets",
     "Op", "get_op",
     "UnitSpec", "resolve_unit",
-    "FieldBundle", "FieldSpec",
+    "FieldBundle", "FieldSpec", "PendingMulti",
     "PendingComm", "SFOps",
     "GlobalPlan", "PaddedPlan", "build_global_plan", "build_padded_plan",
     "ReductionPlan", "build_reduction_plan",

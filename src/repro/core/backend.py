@@ -541,6 +541,13 @@ class SFComm:
     ``REPRO_SF_IMPL_*``, ``REPRO_SF_TUNE_ITERS``) and how to regenerate the
     priors artifacts.
 
+    The split ``reduce_multi_begin``/``reduce_multi_end`` (and bcast twins)
+    expose the fused exchange in the paper's begin/end form; the DDP-style
+    bucketed gradient exchange in :mod:`repro.training.ddp` drives them with
+    byte-budgeted buckets over an allreduce-pattern SF — see the README
+    section "Bucketed gradient exchange & elastic training" for the bucket
+    diagram and how to choose a byte budget.
+
     When the SF topology is *runtime data* rather than setup-time metadata —
     MoE expert routing, where the router's top-k picks define the edge list
     every step — use :class:`repro.core.dynplan.DynPlan` instead: same
@@ -612,6 +619,27 @@ class SFComm:
         fusable group.  Returns the list of updated root fields."""
         return self._bundle(leaffields).reduce_multi(leaffields, rootfields,
                                                      op)
+
+    # split-phase multi-field exchange: the overlap window the DDP gradient
+    # buckets ride (README "Bucketed gradient exchange & elastic training")
+    def bcast_multi_begin(self, rootfields, op="replace"):
+        """Begin half of :meth:`bcast_multi`; complete with
+        :meth:`bcast_multi_end` (or ``pending.end(leaffields)``)."""
+        return self._bundle(rootfields).bcast_multi_begin(rootfields, op)
+
+    def bcast_multi_end(self, pending, leaffields):
+        return pending.end(leaffields)
+
+    def reduce_multi_begin(self, leaffields, op="sum"):
+        """Begin half of :meth:`reduce_multi`: packs every fusable group and
+        returns a :class:`repro.core.fields.PendingMulti`.  Compute issued
+        between begin and :meth:`reduce_multi_end` is independent of the
+        in-flight payloads, so the scheduler overlaps them — this is the
+        primitive :mod:`repro.training.ddp` stacks gradient buckets on."""
+        return self._bundle(leaffields).reduce_multi_begin(leaffields, op)
+
+    def reduce_multi_end(self, pending, rootfields):
+        return pending.end(rootfields)
 
     def gather(self, leafdata):
         return self.backend.gather(leafdata)

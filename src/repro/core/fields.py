@@ -44,7 +44,7 @@ import numpy as np
 from .mpiops import get_op
 from .unit import UnitSpec
 
-__all__ = ["FieldSpec", "FieldBundle"]
+__all__ = ["FieldSpec", "FieldBundle", "PendingMulti"]
 
 # bitcast carrier per itemsize for mixed-dtype REPLACE groups
 _CARRIER = {1: np.dtype(np.uint8), 2: np.dtype(np.uint16),
@@ -129,12 +129,46 @@ def _from_carrier(cols: jnp.ndarray, spec: FieldSpec, n: int,
     return cols.reshape((n,) + spec.shape)
 
 
+@dataclasses.dataclass
+class PendingMulti:
+    """In-flight fused multi-field exchange: one backend token per fusable
+    group, returned by :meth:`FieldBundle.bcast_multi_begin` /
+    :meth:`FieldBundle.reduce_multi_begin`.
+
+    Anything computed between begin and end is independent of the packed
+    payloads, so the XLA latency-hiding scheduler overlaps it with the
+    in-flight exchanges — the paper's ``SFBcastBegin/End`` split applied to
+    the fused multi-field path.  This is what DDP-style bucketed gradient
+    exchange rides: each gradient bucket is one ``reduce_multi_begin`` fired
+    in reverse-backward order while later buckets are still differentiating
+    (see :mod:`repro.training.ddp` and the README section "Bucketed gradient
+    exchange & elastic training").
+
+    When the executing backend has no native begin/end split the fused
+    sources are stashed and the whole exchange runs at ``end`` — same
+    results, no overlap window.
+    """
+
+    kind: str                       # "bcast" | "reduce"
+    bundle: "FieldBundle"
+    op: Any                         # resolved Op
+    items: List[Tuple[_Group, Any]]  # group -> backend pending (or fused src)
+    deferred: bool                  # backend lacks begin/end: items hold srcs
+
+    def end(self, dstfields):
+        """Complete every group against the destination fields."""
+        return self.bundle._multi_end(self, dstfields)
+
+
 class FieldBundle:
     """Fusion plan for k same-pattern, same-length field exchanges.
 
     Built once per field-list signature (``SFComm`` caches bundles); each
     ``bcast_multi``/``reduce_multi`` then issues exactly ``ngroups(op)``
-    backend exchanges — one per fusable group — instead of k.
+    backend exchanges — one per fusable group — instead of k.  The split
+    ``*_begin``/``*_end`` forms return a :class:`PendingMulti` so callers
+    can overlap independent compute with the in-flight fused exchanges
+    (the gradient-bucket hot path of :mod:`repro.training.ddp`).
     """
 
     def __init__(self, comm, specs: Sequence[FieldSpec]):
@@ -222,6 +256,68 @@ class FieldBundle:
         self._check(rootfields, "rootdata", nroot)
         return self._run(leaffields, rootfields, op, self._exec.reduce,
                          nleaf, nroot)
+
+    # ------------------------------------------------- split-phase (begin/end)
+    def _fused_src(self, g: _Group, srcs, nsrc: int):
+        if len(g.members) == 1:
+            return jnp.asarray(srcs[g.members[0]])
+        return jnp.concatenate(
+            [_to_carrier(srcs[i], nsrc, w, g.carrier, g.bitcast)
+             for i, w in zip(g.members, g.widths)], axis=1)
+
+    def _multi_begin(self, kind: str, srcs, op, nsrc: int) -> PendingMulti:
+        opn = get_op(op)
+        begin = getattr(self._exec, f"{kind}_begin", None)
+        items: List[Tuple[_Group, Any]] = []
+        for g in self._groups(opn.name):
+            fsrc = self._fused_src(g, srcs, nsrc)
+            items.append((g, fsrc if begin is None else begin(fsrc, opn)))
+        return PendingMulti(kind, self, opn, items, deferred=begin is None)
+
+    def _multi_end(self, pending: PendingMulti, dsts):
+        kind = pending.kind
+        what = "leafdata" if kind == "bcast" else "rootdata"
+        ndst = self.comm.sf.nleafspace_total if kind == "bcast" \
+            else self.comm.sf.nroots_total
+        self._check(dsts, what, ndst)
+        finish = self._exec.bcast if kind == "bcast" else self._exec.reduce
+        out: List[Optional[jnp.ndarray]] = [None] * len(self.specs)
+        for g, tok in pending.items:
+            if len(g.members) == 1:
+                i = g.members[0]
+                out[i] = finish(tok, jnp.asarray(dsts[i]), pending.op) \
+                    if pending.deferred else tok.end(jnp.asarray(dsts[i]))
+                continue
+            fdst = self._fused_src(g, dsts, ndst)
+            fused = finish(tok, fdst, pending.op) if pending.deferred \
+                else tok.end(fdst)
+            for k, i in enumerate(g.members):
+                cols = fused[:, g.offsets[k]: g.offsets[k + 1]]
+                out[i] = _from_carrier(cols, self.specs[i], ndst, g.bitcast)
+        return out
+
+    def bcast_multi_begin(self, rootfields, op="replace") -> PendingMulti:
+        """Issue the packed root→leaf payloads for every fusable group and
+        return the in-flight token; complete with
+        ``pending.end(leaffields)``."""
+        self._check(rootfields, "rootdata", self.comm.sf.nroots_total)
+        return self._multi_begin("bcast", rootfields, op,
+                                 self.comm.sf.nroots_total)
+
+    def bcast_multi_end(self, pending: PendingMulti, leaffields):
+        return self._multi_end(pending, leaffields)
+
+    def reduce_multi_begin(self, leaffields, op="sum") -> PendingMulti:
+        """Issue the packed leaf→root payloads for every fusable group and
+        return the in-flight token; complete with
+        ``pending.end(rootfields)``.  The gradient-bucket split-phase:
+        compute between begin and end overlaps the in-flight reductions."""
+        self._check(leaffields, "leafdata", self.comm.sf.nleafspace_total)
+        return self._multi_begin("reduce", leaffields, op,
+                                 self.comm.sf.nleafspace_total)
+
+    def reduce_multi_end(self, pending: PendingMulti, rootfields):
+        return self._multi_end(pending, rootfields)
 
 
 def _sibling_backend(backend):

@@ -14,6 +14,7 @@ traffic would).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -21,7 +22,7 @@ import numpy as np
 
 from .engine import Request, ServeEngine
 
-__all__ = ["LoadSpec", "synthesize", "drive"]
+__all__ = ["LoadSpec", "synthesize", "trace_fingerprint", "drive"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,21 @@ def synthesize(spec: LoadSpec) -> List[Tuple[float, Request]]:
         toks = rng.integers(0, spec.vocab, plen).tolist()
         trace.append((float(t), Request(rid=i, tokens=toks, max_new=mnew)))
     return trace
+
+
+def trace_fingerprint(trace: List[Tuple[float, Request]]) -> str:
+    """Content hash of a synthesized trace: arrival times (float64 bits),
+    prompt tokens, and output budgets.  Two processes that synthesize the
+    same :class:`LoadSpec` must produce the same fingerprint — the
+    bit-identical-arrivals guarantee that keeps ``BENCH_serving.json`` runs
+    comparable across machines and repeats (asserted by the seed-stability
+    test in ``tests/test_serving.py``)."""
+    h = hashlib.sha256()
+    for t, req in trace:
+        h.update(np.float64(t).tobytes())
+        h.update(np.asarray(req.tokens, np.int64).tobytes())
+        h.update(np.int64(req.max_new).tobytes())
+    return h.hexdigest()
 
 
 def drive(engine: ServeEngine, trace: List[Tuple[float, Request]],

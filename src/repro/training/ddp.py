@@ -1,0 +1,340 @@
+"""DDP-style bucketed gradient exchange on the star-forest layer.
+
+Per-layer gradient all-reduces are exactly the communication pattern the
+paper argues one SF abstraction should carry: every parameter tensor is a
+field moving over the SAME allreduce-pattern star forest, so fusing them is
+the VecScatter argument applied to training.  This module is the bucketed
+fusion plan:
+
+* :func:`allreduce_sf` — the allreduce-pattern SF: one canonical root row,
+  ``grains`` leaf rows distributed rank-major over ``world`` ranks.  A
+  leaf→root ``reduce(sum)`` is the reduce half of an allreduce; the
+  root→leaf ``bcast`` is the broadcast half.
+* :class:`BucketPlan` — walks the grad pytree **in reverse-backward order**
+  (the last parameters finish differentiating first) and groups tensors
+  into byte-budgeted buckets, so early buckets can fire while later layers
+  are still differentiating.
+* :class:`DDPGradReducer` — lowers each bucket to ONE
+  :meth:`repro.core.fields.FieldBundle.reduce_multi` over the allreduce SF
+  and exposes split-phase :meth:`bucket_reduce_begin` /
+  :meth:`bucket_reduce_end` so the train loop overlaps in-flight buckets
+  against remaining backward compute (the XLA latency-hiding scheduler does
+  the overlap; the begin/end structure is what makes it schedulable).
+
+**Grains and elastic bit-stability.**  The leaf space is ``grains`` fixed
+data-parallel shards ("grains"), not devices: changing the device count
+``world`` only re-partitions which rank owns which grains — the global edge
+order (and therefore the deterministic reduction order) stays grain-major
+regardless of ``world``.  Per-grain gradients are computed by the same
+traced program at any world size, so an elastic shrink/grow resume
+reproduces the uninterrupted loss trajectory **bit-exactly**
+(``tests/test_fault_elastic.py`` asserts this).
+
+Re-derived plans flow through a :class:`repro.core.dynplan.PlanCache`:
+shrinking 8→4 devices misses (new topology, plans rebuilt), growing back
+to a previously-seen world hits.  The hit/miss counters are surfaced in
+step metrics — the re-plan cost signal ``benchmarks/bench_ddp.py``
+measures.
+
+See the README section "Bucketed gradient exchange & elastic training"
+for the bucket diagram and guidance on choosing a byte budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.backend import SFComm
+from ..core.dynplan import PlanCache
+from ..core.fields import FieldBundle, FieldSpec
+from ..core.graph import StarForest
+
+__all__ = [
+    "allreduce_sf", "Bucket", "BucketPlan", "DDPGradReducer",
+    "ddp_plan_cache", "reset_ddp_plan_cache",
+]
+
+
+# --------------------------------------------------------------------------
+# the allreduce-pattern star forest
+# --------------------------------------------------------------------------
+def allreduce_sf(world: int, grains: Optional[int] = None) -> StarForest:
+    """The allreduce-pattern SF: ``grains`` leaves (grain-major global
+    order), all pointing at one root row owned by rank 0, with leaves
+    distributed contiguously over ``world`` ranks.
+
+    ``reduce(sum)`` over it sums every grain's copy into the canonical
+    root; ``bcast`` pushes the canonical row back to every grain —
+    together, an allreduce.  Because ranks own *contiguous* grain ranges in
+    rank order, the global edge list is ``0..grains`` for every ``world``,
+    which is what makes the deterministic reduction order (and therefore
+    elastic resume) independent of the device count.
+    """
+    world = int(world)
+    grains = world if grains is None else int(grains)
+    if world < 1 or grains < 1:
+        raise ValueError(f"need world >= 1 and grains >= 1, got "
+                         f"world={world} grains={grains}")
+    if grains % world:
+        raise ValueError(f"grains ({grains}) must be divisible by world "
+                         f"({world}) so every rank owns whole grains")
+    per = grains // world
+    sf = StarForest(world)
+    for r in range(world):
+        remote = np.stack([np.zeros(per, np.int64),
+                           np.zeros(per, np.int64)], axis=1)
+        sf.set_graph(r, 1 if r == 0 else 0, np.arange(per), remote,
+                     nleafspace=per)
+    return sf.setup()
+
+
+# --------------------------------------------------------------------------
+# bucket planning
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One fused gradient exchange: a contiguous run of grad-tree leaves
+    (indices into ``jax.tree.leaves`` order), grouped under a byte budget.
+    ``nbytes`` counts one copy of the payload (what one exchange moves per
+    grain row)."""
+
+    index: int
+    leaves: Tuple[int, ...]            # flatten-order leaf indices
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    nbytes: int
+
+    @property
+    def specs(self) -> List[FieldSpec]:
+        return [FieldSpec((int(np.prod(s)) if s else 1,), np.dtype(d))
+                for s, d in zip(self.shapes, self.dtypes)]
+
+    def signature(self) -> tuple:
+        return (self.shapes, self.dtypes)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Byte-budgeted bucketing of a gradient pytree, in reverse-backward
+    order: bucket 0 holds the LAST leaves of the tree (the first gradients
+    the backward pass finishes), so it is the first exchange to fire."""
+
+    buckets: Tuple[Bucket, ...]
+    byte_budget: Optional[int]
+    nleaves: int
+
+    @staticmethod
+    def for_tree(tree, byte_budget: Optional[int]) -> "BucketPlan":
+        """Plan buckets for ``tree`` (arrays or ShapeDtypeStructs).  A
+        ``None``/non-positive budget fuses everything into one bucket; a
+        tensor alone larger than the budget gets its own bucket; the final
+        bucket is ragged (whatever is left)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if not leaves:
+            raise ValueError("cannot bucket an empty gradient tree")
+        budget = None if byte_budget is None or byte_budget <= 0 \
+            else int(byte_budget)
+        buckets: List[Bucket] = []
+        cur: List[int] = []
+        cur_bytes = 0
+
+        def close():
+            nonlocal cur, cur_bytes
+            if not cur:
+                return
+            buckets.append(Bucket(
+                index=len(buckets), leaves=tuple(cur),
+                shapes=tuple(tuple(int(d) for d in leaves[i].shape)
+                             for i in cur),
+                dtypes=tuple(np.dtype(leaves[i].dtype).str for i in cur),
+                nbytes=cur_bytes))
+            cur, cur_bytes = [], 0
+
+        for i in reversed(range(len(leaves))):
+            nb = int(np.prod(leaves[i].shape) if leaves[i].shape else 1) \
+                * np.dtype(leaves[i].dtype).itemsize
+            if budget is not None and cur and cur_bytes + nb > budget:
+                close()
+            cur.append(i)
+            cur_bytes += nb
+            if budget is not None and cur_bytes >= budget:
+                close()
+        close()
+        return BucketPlan(tuple(buckets), budget, len(leaves))
+
+    def signature(self) -> tuple:
+        return tuple(b.signature() for b in self.buckets)
+
+    @property
+    def nbuckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b.nbytes for b in self.buckets)
+
+
+# --------------------------------------------------------------------------
+# plan cache (module-level, shared across elastic restarts)
+# --------------------------------------------------------------------------
+_PLAN_CACHE = PlanCache("ddp-buckets")
+
+
+def ddp_plan_cache() -> PlanCache:
+    """The process-wide cache of allreduce SFs and bucket bundles, keyed by
+    ``(world, grains, backend, bucket signature)``.  An elastic shrink/grow
+    (new world) misses and re-derives; returning to a previously-seen world
+    hits.  ``stats()`` is what the train loop surfaces in metrics."""
+    return _PLAN_CACHE
+
+
+def reset_ddp_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+# --------------------------------------------------------------------------
+# the reducer
+# --------------------------------------------------------------------------
+class DDPGradReducer:
+    """Bucketed gradient allreduce over the star-forest layer.
+
+    Construct OUTSIDE jit (at train-step-factory time): construction is
+    where SF plans and fused bundles are derived — or re-derived after an
+    elastic world change — through :func:`ddp_plan_cache`.  The per-step
+    methods are pure jnp and trace into the train step.
+
+    Input gradients are *per-grain*: every leaf of the grads tree carries a
+    leading ``grains`` axis (grain g's gradient over its batch shard).
+    ``bucket_reduce_begin`` fires one fused ``reduce_multi_begin`` per
+    bucket in reverse-backward order; ``bucket_reduce_end`` completes them
+    and returns the tree of summed (or grain-averaged) gradients in the
+    original leaf shapes.
+    """
+
+    def __init__(self, plan: BucketPlan, world: int,
+                 grains: Optional[int] = None, *,
+                 backend: str = "global",
+                 cache: Optional[PlanCache] = None):
+        self.plan = plan
+        self.world = int(world)
+        self.grains = self.world if grains is None else int(grains)
+        self.backend = backend
+        cache = cache if cache is not None else _PLAN_CACHE
+        self._cache = cache
+        self.comm: SFComm = cache.get_or_build(
+            ("sf", self.world, self.grains, backend),
+            lambda: SFComm(allreduce_sf(self.world, self.grains),
+                           backend=backend))
+        self._bundles: List[FieldBundle] = [
+            cache.get_or_build(
+                ("bundle", self.world, self.grains, backend, b.signature()),
+                lambda b=b: FieldBundle(self.comm, b.specs))
+            for b in plan.buckets]
+
+    # ------------------------------------------------------------ helpers
+    def _bucket_fields(self, flat: Sequence[jnp.ndarray], b: Bucket
+                       ) -> List[jnp.ndarray]:
+        """Per-grain grads -> (grains, numel) leaf fields for bucket b."""
+        out = []
+        for i, shape in zip(b.leaves, b.shapes):
+            g = jnp.asarray(flat[i])
+            if g.shape[:1] != (self.grains,) or \
+                    tuple(g.shape[1:]) != tuple(shape):
+                raise ValueError(
+                    f"grain grads leaf {i} has shape {g.shape}; expected "
+                    f"({self.grains}, *{tuple(shape)})")
+            out.append(g.reshape(self.grains, -1))
+        return out
+
+    # ---------------------------------------------------------- split phase
+    def bucket_reduce_begin(self, grain_grads) -> List[Tuple[Bucket, Any]]:
+        """Fire one fused ``reduce_multi_begin`` per bucket, in
+        reverse-backward order (bucket 0 first).  ``grain_grads`` is the
+        grads pytree with a leading ``grains`` axis on every leaf."""
+        flat = jax.tree_util.tree_leaves(grain_grads)
+        if len(flat) != self.plan.nleaves:
+            raise ValueError(f"grads tree has {len(flat)} leaves, plan has "
+                             f"{self.plan.nleaves}")
+        pendings = []
+        for b, bundle in zip(self.plan.buckets, self._bundles):
+            fields = self._bucket_fields(flat, b)
+            pendings.append((b, bundle.reduce_multi_begin(fields, "sum")))
+        return pendings
+
+    def bucket_reduce_end(self, pendings, grain_grads, *,
+                          average: bool = True):
+        """Complete every in-flight bucket; returns the reduced grads tree
+        with the grain axis folded away (summed over grains, divided by
+        ``grains`` when ``average``)."""
+        treedef = jax.tree_util.tree_structure(grain_grads)
+        flat_out: List[Optional[jnp.ndarray]] = [None] * self.plan.nleaves
+        for b, pending in pendings:
+            roots = [jnp.zeros((1, int(np.prod(s)) if s else 1),
+                               np.dtype(d))
+                     for s, d in zip(b.shapes, b.dtypes)]
+            reduced = pending.end(roots)
+            for i, shape, r in zip(b.leaves, b.shapes, reduced):
+                r = r.reshape(shape)
+                if average:
+                    r = r / np.asarray(self.grains, r.dtype) \
+                        if np.dtype(r.dtype).kind == "f" \
+                        else r // self.grains
+                flat_out[i] = r
+        return jax.tree_util.tree_unflatten(treedef, flat_out)
+
+    def allreduce(self, grain_grads, *, average: bool = True):
+        """One-shot bucketed allreduce: begin + end."""
+        return self.bucket_reduce_end(self.bucket_reduce_begin(grain_grads),
+                                      grain_grads, average=average)
+
+    def reduce_per_tensor(self, grain_grads, *, average: bool = True):
+        """The unfused reference: one SF reduce per tensor (what bucketing
+        replaces).  Bit-matches :meth:`allreduce` — the property suite's
+        acceptance criterion — because fusion only widens the payload row;
+        the per-column deterministic reduction order is unchanged."""
+        def one(g):
+            g = jnp.asarray(g)
+            cols = g.reshape(self.grains, -1)
+            r = self.comm.reduce(cols, jnp.zeros((1, cols.shape[1]),
+                                                 cols.dtype), "sum")
+            r = r.reshape(g.shape[1:])
+            if average:
+                r = r / np.asarray(self.grains, r.dtype) \
+                    if np.dtype(r.dtype).kind == "f" else r // self.grains
+            return r
+        return jax.tree_util.tree_map(one, grain_grads)
+
+    def bcast_grads(self, grads):
+        """Broadcast canonical grads back to every grain (the allreduce
+        broadcast half; useful when replicas keep private copies)."""
+        def one(g):
+            g = jnp.asarray(g)
+            row = g.reshape(1, -1)
+            out = self.comm.bcast(
+                row, jnp.zeros((self.grains, row.shape[1]), row.dtype))
+            return out.reshape((self.grains,) + g.shape)
+        return jax.tree_util.tree_map(one, grads)
+
+    # ------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, Any]:
+        """Host-side stats for step metrics: bucket layout + the plan-cache
+        hit/miss counters that witness elastic re-planning."""
+        stats = self._cache.stats()
+        return {
+            "ddp_world": self.world,
+            "ddp_grains": self.grains,
+            "ddp_nbuckets": self.plan.nbuckets,
+            "ddp_bucket_bytes": [b.nbytes for b in self.plan.buckets],
+            "ddp_plan_cache_hits": stats["hits"],
+            "ddp_plan_cache_misses": stats["misses"],
+            "ddp_plan_cache_entries": stats["entries"],
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"DDPGradReducer(world={self.world}, grains={self.grains}, "
+                f"nbuckets={self.plan.nbuckets}, backend={self.backend!r})")

@@ -36,9 +36,18 @@ class StragglerDetector:
 
     On a multi-host fleet each host reports its step time; a persistent
     outlier host is a straggler candidate for exclusion at the next restart.
+
+    The z-score denominator is floored at ``max(min_rel_sd * mean,
+    min_abs_sd)``: a cold-start burst of near-identical step times yields
+    sd ≈ 0, and a bare epsilon would flag the very next *normal* step as a
+    straggler (any deviation divided by 1e-9 clears any threshold).  The
+    relative floor says "a step is never an outlier unless it deviates by
+    at least ``z_threshold * min_rel_sd`` of the typical step time".
     """
     window: int = 50
     z_threshold: float = 4.0
+    min_rel_sd: float = 0.05     # sd floor as a fraction of the window mean
+    min_abs_sd: float = 1e-6     # absolute sd floor, seconds
     _times: List[float] = dataclasses.field(default_factory=list)
 
     def observe(self, dt: float) -> bool:
@@ -47,7 +56,8 @@ class StragglerDetector:
         if len(hist) < 10:
             return False
         mu = float(np.mean(hist))
-        sd = float(np.std(hist)) + 1e-9
+        sd = max(float(np.std(hist)), self.min_rel_sd * abs(mu),
+                 self.min_abs_sd)
         return (dt - mu) / sd > self.z_threshold
 
     @property
@@ -62,6 +72,8 @@ def run_with_restarts(step_fn: Callable[[int, Dict], Dict],
                       total_steps: int,
                       max_restarts: int = 3,
                       on_restore: Optional[Callable[[Dict], Dict]] = None,
+                      elastic_worlds: Optional[List[int]] = None,
+                      comm_metrics: Optional[Callable[[], Dict]] = None,
                       ) -> Dict:
     """Run ``step_fn(step, state) -> state`` with checkpoint/restart.
 
@@ -70,6 +82,19 @@ def run_with_restarts(step_fn: Callable[[int, Dict], Dict],
     shardings), and continue from the restored step.  Raises after
     ``max_restarts`` failures — matching fleet policy where repeated crashes
     need human eyes.
+
+    **Elastic shrink/grow:** ``elastic_worlds[r-1]`` (last entry repeating)
+    is written into ``state["world"]`` before ``on_restore`` at the r-th
+    restart — the fleet handing the restarted job a different device count.
+    ``on_restore`` is where the job rebuilds its step function for the new
+    world; with the DDP layer that re-derives the bucket SF plans through
+    :func:`repro.training.ddp.ddp_plan_cache` (a cache *miss* for an unseen
+    world, a *hit* for a revisited one).
+
+    **Comm metrics:** when ``comm_metrics`` is given (e.g.
+    ``reducer.metrics``), its dict is snapshotted into
+    ``state["comm_metrics"]`` after every successful step — surfacing the
+    plan-cache hit/miss counters alongside the training metrics.
     """
     detector = StragglerDetector()
     restarts = 0
@@ -80,6 +105,8 @@ def run_with_restarts(step_fn: Callable[[int, Dict], Dict],
             state = step_fn(step, state)
             dt = time.perf_counter() - t0
             state["straggler_flag"] = detector.observe(dt)
+            if comm_metrics is not None:
+                state["comm_metrics"] = dict(comm_metrics())
             step += 1
             state["step"] = step
             ckpt.maybe_save(step, state["tree"],
@@ -89,10 +116,16 @@ def run_with_restarts(step_fn: Callable[[int, Dict], Dict],
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if elastic_worlds:
+                state["world"] = int(
+                    elastic_worlds[min(restarts - 1,
+                                       len(elastic_worlds) - 1)])
             s, tree, extra = ckpt.restore_latest(state["tree"])
             if s is None:
                 # no checkpoint yet: restart from scratch
                 step = 0
+                if on_restore is not None:
+                    state = on_restore(state)
                 continue
             state["tree"] = tree
             step = int(extra.get("step", s))

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["OptConfig", "init_opt_state", "adamw_update", "lr_at"]
+__all__ = ["OptConfig", "init_opt_state", "adamw_update",
+           "adamw_update_bucketed", "lr_at"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,20 +100,24 @@ def global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
-def adamw_update(params, grads, opt_state: Dict, cfg: OptConfig
-                 ) -> Tuple[Dict, Dict, Dict]:
-    """One AdamW step.  Returns (params', opt_state', metrics)."""
-    kind = cfg.moments_dtype
+def _update_scalars(grads, opt_state: Dict, cfg: OptConfig):
+    """The per-step scalars every leaf update shares: (step, lr, clip,
+    bc1, bc2).  ``clip`` comes from the GLOBAL grad norm, so bucketed and
+    whole-tree updates see identical scaling."""
     step = opt_state["step"] + 1
     lr = lr_at(cfg, step)
     gnorm = global_norm(grads)
     clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
         if cfg.grad_clip else jnp.asarray(1.0)
-
     bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
     bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    return step, lr, gnorm, clip, bc1, bc2
 
-    is_q = lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+def _make_leaf_updater(cfg: OptConfig, lr, clip, bc1, bc2):
+    """One-leaf AdamW update closure shared by :func:`adamw_update` and
+    :func:`adamw_update_bucketed`."""
+    kind = cfg.moments_dtype
 
     def upd_flat(p, g, m, v):
         g = g.astype(jnp.float32) * clip
@@ -143,6 +148,14 @@ def adamw_update(params, grads, opt_state: Dict, cfg: OptConfig
                 (p, g, m, v))
         return upd_flat(p, g, m, v)
 
+    return upd
+
+
+def adamw_update(params, grads, opt_state: Dict, cfg: OptConfig
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """One AdamW step.  Returns (params', opt_state', metrics)."""
+    step, lr, gnorm, clip, bc1, bc2 = _update_scalars(grads, opt_state, cfg)
+    upd = _make_leaf_updater(cfg, lr, clip, bc1, bc2)
     flat_p, tdef = jax.tree_util.tree_flatten(params)
     flat_g = tdef.flatten_up_to(grads)
     flat_m = tdef.flatten_up_to(opt_state["m"])
@@ -154,3 +167,36 @@ def adamw_update(params, grads, opt_state: Dict, cfg: OptConfig
     new_v = tdef.unflatten([o[2] for o in out])
     metrics = {"grad_norm": gnorm, "lr": lr}
     return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def adamw_update_bucketed(params, grads, opt_state: Dict, cfg: OptConfig,
+                          bucket_plan) -> Tuple[Dict, Dict, Dict]:
+    """AdamW consuming grads bucket-by-bucket, *in place* of the whole-tree
+    sweep: parameters are updated in ``bucket_plan``'s reverse-backward
+    bucket order, so the update for an early bucket is schedulable while
+    later buckets' reductions are still in flight (the sharded-update half
+    of DDP-style training; see :mod:`repro.training.ddp`).
+
+    Bit-identical to :func:`adamw_update` — per-leaf updates are
+    independent given the shared global-norm clip, which is computed over
+    the full grads tree before any bucket is consumed.
+    """
+    step, lr, gnorm, clip, bc1, bc2 = _update_scalars(grads, opt_state, cfg)
+    upd = _make_leaf_updater(cfg, lr, clip, bc1, bc2)
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    covered = sorted(i for b in bucket_plan.buckets for i in b.leaves)
+    if covered != list(range(len(flat_p))):
+        raise ValueError(f"bucket plan covers {len(covered)} of "
+                         f"{len(flat_p)} param leaves")
+    new_p, new_m, new_v = list(flat_p), list(flat_m), list(flat_v)
+    for b in bucket_plan.buckets:
+        for i in b.leaves:
+            new_p[i], new_m[i], new_v[i] = upd(
+                flat_p[i], flat_g[i], flat_m[i], flat_v[i])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (tdef.unflatten(new_p),
+            {"m": tdef.unflatten(new_m), "v": tdef.unflatten(new_v),
+             "step": step}, metrics)

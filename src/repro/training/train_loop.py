@@ -24,9 +24,11 @@ import numpy as np
 
 from ..models import transformer as T
 from ..models.config import ModelConfig
-from .optimizer import OptConfig, adamw_update, init_opt_state
+from .optimizer import (OptConfig, adamw_update, adamw_update_bucketed,
+                        init_opt_state)
 
-__all__ = ["TrainConfig", "make_loss_fn", "make_train_step", "TrainState"]
+__all__ = ["TrainConfig", "make_loss_fn", "make_train_step",
+           "make_ddp_train_step", "TrainState"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +143,95 @@ def make_train_step(cfg: ModelConfig, ocfg: OptConfig,
         return params, opt_state, metrics
 
     return train_step
+
+
+def make_ddp_train_step(cfg: Optional[ModelConfig], ocfg: OptConfig,
+                        tcfg: TrainConfig = TrainConfig(), *,
+                        world: int, byte_budget: Optional[int],
+                        grains: Optional[int] = None,
+                        backend: str = "global",
+                        loss_fn: Optional[Callable] = None,
+                        params_template=None):
+    """DDP-style train step: per-grain gradients, bucketed SF allreduce,
+    bucket-ordered sharded update.
+
+    Returns ``(train_step, reducer_fn)`` where ``reducer_fn()`` yields the
+    live :class:`repro.training.ddp.DDPGradReducer` (``None`` until the
+    first step when no ``params_template`` is given — call its
+    ``metrics()`` for the plan-cache counters).  ``train_step(params,
+    opt_state, batch)`` splits the global batch into ``grains`` equal shards, computes
+    per-grain gradients (vmapped ``value_and_grad``), fires one fused
+    ``reduce_multi_begin`` per byte-budgeted bucket in reverse-backward
+    order (:class:`repro.training.ddp.DDPGradReducer`), completes them, and
+    applies :func:`repro.training.optimizer.adamw_update_bucketed` in the
+    same bucket order — the split-phase structure that lets the XLA
+    scheduler overlap in-flight bucket reductions with the remaining
+    backward compute and with earlier buckets' optimizer updates.
+
+    ``world`` is the device count; ``grains`` (default ``world``) is the
+    FIXED data-parallel decomposition that makes elastic shrink/grow
+    bit-stable: the step's math depends only on ``grains``, while ``world``
+    re-partitions the SF — re-deriving its plans through
+    :func:`repro.training.ddp.ddp_plan_cache` (misses on a new world, hits
+    on a revisited one; surfaced by ``reducer.metrics()``).
+
+    ``loss_fn(params, batch) -> (loss, aux_dict)`` overrides the model loss
+    (tests and benchmarks drive small closed-form losses); ``cfg`` may then
+    be ``None``.  ``params_template`` (any pytree of arrays or
+    ShapeDtypeStructs shaped like the params) pins the bucket plan at
+    factory time; without it the plan is derived from the first call's
+    params inside the reducer-building closure.
+    """
+    from .ddp import BucketPlan, DDPGradReducer
+
+    if loss_fn is None:
+        if cfg is None:
+            raise ValueError("need a ModelConfig or an explicit loss_fn")
+        loss_fn = make_loss_fn(cfg, tcfg)
+    G = world if grains is None else int(grains)
+
+    state = {"reducer": None}
+    if params_template is not None:
+        state["reducer"] = DDPGradReducer(
+            BucketPlan.for_tree(params_template, byte_budget), world,
+            grains=G, backend=backend)
+
+    def reducer_for(params) -> "DDPGradReducer":
+        if state["reducer"] is None:
+            state["reducer"] = DDPGradReducer(
+                BucketPlan.for_tree(params, byte_budget), world,
+                grains=G, backend=backend)
+        return state["reducer"]
+
+    def train_step(params, opt_state, batch):
+        red = reducer_for(params)
+
+        def slice_grains(x):
+            B = x.shape[0]
+            if B % G:
+                raise ValueError(f"batch axis {B} not divisible by "
+                                 f"{G} grains")
+            return x.reshape((G, B // G) + x.shape[1:])
+
+        gb = jax.tree.map(slice_grains, batch)
+        (losses, mets), grain_grads = jax.vmap(
+            jax.value_and_grad(loss_fn, has_aux=True),
+            in_axes=(None, 0))(params, gb)
+        # reverse-backward bucket order: early buckets in flight while the
+        # optimizer consumes them bucket-by-bucket below
+        pendings = red.bucket_reduce_begin(grain_grads)
+        grads = red.bucket_reduce_end(pendings, grain_grads, average=True)
+        params, opt_state, omet = adamw_update_bucketed(
+            params, grads, opt_state, ocfg, red.plan)
+        metrics = {"loss": jnp.mean(losses),
+                   **{k: jnp.mean(v) for k, v in mets.items()}, **omet}
+        return params, opt_state, metrics
+
+    def reducer():
+        return state["reducer"]
+
+    train_step.reducer = reducer
+    return train_step, reducer
 
 
 @dataclasses.dataclass

@@ -8,6 +8,22 @@ import sys
 import os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Deterministic hypothesis profile for CI: no deadline (jit compiles blow
+# any per-example budget on cold caches) and derandomized (fixed seed), so
+# the property suites are reproducible run-to-run.  Select another profile
+# with HYPOTHESIS_PROFILE=dev for local exploratory fuzzing.
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro-ci", deadline=None, derandomize=True, max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.register_profile("dev", deadline=None, max_examples=50)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "repro-ci"))
+except ImportError:  # hypothesis is a CI-only dependency
+    pass
+
 
 @pytest.fixture
 def rng():

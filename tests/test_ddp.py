@@ -1,0 +1,425 @@
+"""DDP bucketed gradient exchange: planner edges, fused-vs-per-tensor
+equivalence, split-phase parity, bucketed optimizer bit-identity, the
+plan-cache miss/hit lifecycle, and the end-to-end DDP train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FieldBundle, SFComm
+from repro.core.dynplan import PlanCache
+from repro.training.ddp import (BucketPlan, DDPGradReducer, allreduce_sf,
+                                ddp_plan_cache, reset_ddp_plan_cache)
+from repro.training.optimizer import (OptConfig, adamw_update,
+                                      adamw_update_bucketed, init_opt_state)
+from repro.training.train_loop import make_ddp_train_step
+
+
+def small_tree(rng=None, dtype=np.float32):
+    rng = rng or np.random.default_rng(0)
+    return {
+        "emb": rng.standard_normal((6, 4)).astype(dtype),
+        "blocks": [
+            {"w": rng.standard_normal((4, 4)).astype(dtype),
+             "b": rng.standard_normal((4,)).astype(dtype)},
+            {"w": rng.standard_normal((4, 4)).astype(dtype),
+             "b": rng.standard_normal((4,)).astype(dtype)},
+        ],
+        "head": rng.standard_normal((4, 6)).astype(dtype),
+    }
+
+
+def grain_grads_for(tree, grains, seed=1):
+    rng = np.random.default_rng(seed)
+    return jax.tree_util.tree_map(
+        lambda x: (rng.standard_normal((grains,) + np.shape(x)) * 2
+                   ).astype(np.asarray(x).dtype), tree)
+
+
+# --------------------------------------------------------------------------
+# the allreduce SF
+# --------------------------------------------------------------------------
+def test_allreduce_sf_shape():
+    sf = allreduce_sf(4, grains=8)
+    assert sf.nranks == 4
+    assert sf.nroots_total == 1
+    assert sf.nleafspace_total == 8
+    # every leaf points at the single canonical root
+    edges = sf.edges_global()
+    np.testing.assert_array_equal(edges[:, 0], np.zeros(8, np.int64))
+
+
+def test_allreduce_sf_edge_order_world_invariant():
+    """The global edge list is identical for any world dividing grains —
+    the property that makes elastic shrink/grow bit-stable."""
+    ref = allreduce_sf(1, grains=8).edges_global()
+    for world in (2, 4, 8):
+        np.testing.assert_array_equal(
+            allreduce_sf(world, grains=8).edges_global(), ref)
+
+
+def test_allreduce_sf_validation():
+    with pytest.raises(ValueError):
+        allreduce_sf(3, grains=4)        # not divisible
+    with pytest.raises(ValueError):
+        allreduce_sf(0)
+
+
+# --------------------------------------------------------------------------
+# bucket planner edges
+# --------------------------------------------------------------------------
+def test_plan_none_budget_single_bucket():
+    tree = small_tree()
+    plan = BucketPlan.for_tree(tree, None)
+    assert plan.nbuckets == 1
+    n = len(jax.tree_util.tree_leaves(tree))
+    assert plan.buckets[0].leaves == tuple(reversed(range(n)))
+    assert plan.total_bytes == sum(
+        x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def test_plan_tiny_budget_all_singletons():
+    tree = small_tree()
+    plan = BucketPlan.for_tree(tree, 1)   # smaller than any tensor
+    n = len(jax.tree_util.tree_leaves(tree))
+    assert plan.nbuckets == n
+    assert all(len(b.leaves) == 1 for b in plan.buckets)
+
+
+def test_plan_oversized_tensor_gets_own_bucket():
+    tree = [np.zeros(100, np.float32),      # 400 B > budget
+            np.zeros(4, np.float32),
+            np.zeros(4, np.float32)]
+    plan = BucketPlan.for_tree(tree, 64)
+    # reverse order: the two small tensors share, the big one is alone
+    assert [b.leaves for b in plan.buckets] == [(2, 1), (0,)]
+    assert plan.buckets[1].nbytes == 400
+
+
+def test_plan_ragged_final_bucket():
+    tree = [np.zeros(8, np.float32)] * 5    # 32 B each
+    plan = BucketPlan.for_tree(tree, 64)    # 2 per bucket, final ragged
+    assert [b.leaves for b in plan.buckets] == [(4, 3), (2, 1), (0,)]
+
+
+def test_plan_scalar_leaves_and_empty_tree():
+    plan = BucketPlan.for_tree([np.float32(1.0), np.zeros((), np.float32)],
+                               None)
+    assert plan.buckets[0].nbytes == 8
+    with pytest.raises(ValueError):
+        BucketPlan.for_tree([], 64)
+
+
+def test_plan_signature_distinguishes_layouts():
+    a = BucketPlan.for_tree([np.zeros(4, np.float32)], None)
+    b = BucketPlan.for_tree([np.zeros(4, np.int32)], None)
+    c = BucketPlan.for_tree([np.zeros(5, np.float32)], None)
+    assert len({a.signature(), b.signature(), c.signature()}) == 3
+
+
+def test_plan_accepts_shape_dtype_structs():
+    tree = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+            "b": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    plan = BucketPlan.for_tree(tree, None)
+    assert plan.total_bytes == (16 + 4) * 4
+
+
+# --------------------------------------------------------------------------
+# reducer numerics
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("budget", [None, 1, 48, 4096])
+def test_allreduce_matches_numpy(budget):
+    tree = small_tree()
+    red = DDPGradReducer(BucketPlan.for_tree(tree, budget), world=2,
+                         grains=4, cache=PlanCache("t"))
+    gg = grain_grads_for(tree, 4)
+    out = red.allreduce(gg, average=True)
+    want = jax.tree_util.tree_map(lambda g: np.mean(np.asarray(g), axis=0,
+                                                    dtype=np.float32), gg)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), b, rtol=1e-6, atol=1e-6)
+
+
+def test_allreduce_sum_vs_average():
+    tree = {"w": np.ones((3, 3), np.float32)}
+    red = DDPGradReducer(BucketPlan.for_tree(tree, None), world=1, grains=4,
+                         cache=PlanCache("t"))
+    gg = {"w": np.ones((4, 3, 3), np.float32)}
+    np.testing.assert_array_equal(
+        np.asarray(red.allreduce(gg, average=False)["w"]),
+        np.full((3, 3), 4.0, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(red.allreduce(gg, average=True)["w"]),
+        np.ones((3, 3), np.float32))
+
+
+def test_bucketed_bitmatches_per_tensor():
+    tree = small_tree()
+    for budget in (None, 1, 48, 200):
+        red = DDPGradReducer(BucketPlan.for_tree(tree, budget), world=2,
+                             grains=4, cache=PlanCache("t"))
+        gg = grain_grads_for(tree, 4)
+        for a, b in zip(
+                jax.tree_util.tree_leaves(red.allreduce(gg)),
+                jax.tree_util.tree_leaves(red.reduce_per_tensor(gg))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_phase_equals_one_shot():
+    tree = small_tree()
+    red = DDPGradReducer(BucketPlan.for_tree(tree, 48), world=2, grains=4,
+                         cache=PlanCache("t"))
+    gg = grain_grads_for(tree, 4)
+    pendings = red.bucket_reduce_begin(gg)
+    assert len(pendings) == red.plan.nbuckets
+    split = red.bucket_reduce_end(pendings, gg, average=True)
+    one = red.allreduce(gg, average=True)
+    for a, b in zip(jax.tree_util.tree_leaves(split),
+                    jax.tree_util.tree_leaves(one)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_reduce_world_invariant_bitwise():
+    """grains fixed -> reduced grads are BIT-identical across any world
+    dividing grains (the elastic-resume guarantee)."""
+    tree = small_tree()
+    gg = grain_grads_for(tree, 4)
+    ref = None
+    for world in (1, 2, 4):
+        red = DDPGradReducer(BucketPlan.for_tree(tree, 64), world,
+                             grains=4, cache=PlanCache("t"))
+        got = [np.asarray(x) for x in
+               jax.tree_util.tree_leaves(red.allreduce(gg))]
+        if ref is None:
+            ref = got
+        else:
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(a, b)
+
+
+def test_bcast_grads_roundtrip():
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    red = DDPGradReducer(BucketPlan.for_tree(tree, None), world=2, grains=4,
+                         cache=PlanCache("t"))
+    out = red.bcast_grads(tree)
+    assert out["w"].shape == (4, 2, 3)
+    for g in range(4):
+        np.testing.assert_array_equal(np.asarray(out["w"][g]), tree["w"])
+
+
+def test_reducer_rejects_bad_grain_shapes():
+    tree = {"w": np.zeros((2, 3), np.float32)}
+    red = DDPGradReducer(BucketPlan.for_tree(tree, None), world=1, grains=4,
+                         cache=PlanCache("t"))
+    with pytest.raises(ValueError):
+        red.bucket_reduce_begin({"w": np.zeros((2, 2, 3), np.float32)})
+    with pytest.raises(ValueError):
+        red.bucket_reduce_begin({"w": np.zeros((4, 9), np.float32),
+                                 "extra": np.zeros((4, 1), np.float32)})
+
+
+# --------------------------------------------------------------------------
+# SFComm multi begin/end parity (the facade the reducer rides on)
+# --------------------------------------------------------------------------
+def test_sfcomm_reduce_multi_begin_end_parity():
+    comm = SFComm(allreduce_sf(2, grains=4), backend="global")
+    rng = np.random.default_rng(0)
+    leaves = [jnp.asarray(rng.standard_normal((4, 3)).astype(np.float32)),
+              jnp.asarray(rng.standard_normal((4, 5)).astype(np.float32))]
+    roots = [jnp.zeros((1, 3), jnp.float32), jnp.zeros((1, 5), jnp.float32)]
+    tok = comm.reduce_multi_begin(leaves, "sum")
+    got = comm.reduce_multi_end(tok, roots)
+    bundle = FieldBundle.for_data(comm, leaves)
+    want = bundle.reduce_multi(leaves, roots, "sum")
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sfcomm_bcast_multi_begin_end_parity():
+    comm = SFComm(allreduce_sf(2, grains=4), backend="global")
+    roots = [jnp.arange(3, dtype=jnp.float32).reshape(1, 3),
+             jnp.arange(5, dtype=jnp.float32).reshape(1, 5)]
+    leaves = [jnp.zeros((4, 3), jnp.float32), jnp.zeros((4, 5), jnp.float32)]
+    tok = comm.bcast_multi_begin(roots)
+    got = comm.bcast_multi_end(tok, leaves)
+    bundle = FieldBundle.for_data(comm, roots)
+    want = bundle.bcast_multi(roots, leaves)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# bucketed optimizer
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("moments", ["float32", "int8"])
+def test_adamw_bucketed_bit_identical(moments):
+    tree = small_tree()
+    params = jax.tree_util.tree_map(jnp.asarray, tree)
+    grads = jax.tree_util.tree_map(
+        jnp.asarray, small_tree(np.random.default_rng(7)))
+    cfg = OptConfig(lr=1e-2, moments_dtype=moments)
+    for budget in (None, 1, 48):
+        plan = BucketPlan.for_tree(params, budget)
+        o1 = init_opt_state(params, cfg)
+        o2 = init_opt_state(params, cfg)
+        p1, s1, m1 = adamw_update(params, grads, o1, cfg)
+        p2, s2, m2 = adamw_update_bucketed(params, grads, o2, cfg, plan)
+        for a, b in zip(jax.tree_util.tree_leaves((p1, s1)),
+                        jax.tree_util.tree_leaves((p2, s2))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(m1["grad_norm"]),
+                                      np.asarray(m2["grad_norm"]))
+
+
+def test_adamw_bucketed_rejects_partial_plan():
+    params = {"a": jnp.zeros(4), "b": jnp.zeros(4)}
+    grads = params
+    cfg = OptConfig()
+    plan = BucketPlan.for_tree({"a": np.zeros(4, np.float32)}, None)
+    with pytest.raises(ValueError):
+        adamw_update_bucketed(params, grads, init_opt_state(params, cfg),
+                              cfg, plan)
+
+
+# --------------------------------------------------------------------------
+# plan cache lifecycle
+# --------------------------------------------------------------------------
+def test_plan_cache_miss_then_hit():
+    cache = PlanCache("t")
+    tree = small_tree()
+    plan = BucketPlan.for_tree(tree, 64)
+    DDPGradReducer(plan, world=2, grains=4, cache=cache)
+    # misses = 1 SF + one per UNIQUE bucket signature (same-layout buckets
+    # share one bundle entry)
+    uniq = len(set(b.signature() for b in plan.buckets))
+    s0 = cache.stats()
+    assert s0["misses"] == 1 + uniq
+    # duplicate-signature buckets hit the shared entry even on first build
+    assert s0["hits"] == plan.nbuckets - uniq
+    # same world again: all hits, no new entries
+    DDPGradReducer(plan, world=2, grains=4, cache=cache)
+    s1 = cache.stats()
+    assert s1["misses"] == s0["misses"]
+    assert s1["hits"] == s0["hits"] + 1 + plan.nbuckets
+    # elastic shrink to a NEW world: misses again (re-derivation)
+    DDPGradReducer(plan, world=4, grains=4, cache=cache)
+    s2 = cache.stats()
+    assert s2["misses"] == 2 * (1 + uniq)
+    # grow back to the first world: pure hits
+    DDPGradReducer(plan, world=2, grains=4, cache=cache)
+    assert cache.stats()["misses"] == s2["misses"]
+
+
+def test_module_plan_cache_reset():
+    reset_ddp_plan_cache()
+    tree = {"w": np.zeros(4, np.float32)}
+    red = DDPGradReducer(BucketPlan.for_tree(tree, None), world=1, grains=1)
+    m = red.metrics()
+    assert m["ddp_plan_cache_misses"] >= 2
+    assert m["ddp_world"] == 1 and m["ddp_nbuckets"] == 1
+    assert ddp_plan_cache().stats()["entries"] >= 2
+    reset_ddp_plan_cache()
+    assert ddp_plan_cache().stats()["entries"] == 0
+
+
+# --------------------------------------------------------------------------
+# the DDP train step
+# --------------------------------------------------------------------------
+def quad_loss(params, batch):
+    x, y = batch["x"], batch["y"]
+    pred = x @ params["w"] + params["b"]
+    loss = jnp.mean(jnp.square(pred - y))
+    return loss, {"mse": loss}
+
+
+def quad_problem(batch=8, din=6, dout=3, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.standard_normal((din, dout)) * 0.1,
+                               jnp.float32),
+              "b": jnp.zeros((dout,), jnp.float32)}
+    wt = rng.standard_normal((din, dout)).astype(np.float32)
+    x = rng.standard_normal((batch, din)).astype(np.float32)
+    y = x @ wt + 0.01 * rng.standard_normal((batch, dout)).astype(np.float32)
+    return params, {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def test_ddp_train_step_loss_decreases():
+    params, batch = quad_problem()
+    ocfg = OptConfig(lr=5e-2, warmup_steps=1, decay_steps=1000,
+                     weight_decay=0.0)
+    step, reducer = make_ddp_train_step(
+        None, ocfg, world=2, byte_budget=64, grains=4, loss_fn=quad_loss)
+    opt = init_opt_state(params, ocfg)
+    losses = []
+    for _ in range(40):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.2 * losses[0]
+    assert reducer() is not None
+    assert reducer().plan.nbuckets >= 1
+
+
+def test_ddp_train_step_matches_plain_gradient():
+    """One DDP step (grain-averaged grads) == one whole-batch AdamW step."""
+    params, batch = quad_problem()
+    ocfg = OptConfig(lr=1e-2, warmup_steps=1, decay_steps=100,
+                     weight_decay=0.0, grad_clip=0.0)
+    step, _ = make_ddp_train_step(
+        None, ocfg, world=1, byte_budget=None, grains=1, loss_fn=quad_loss,
+        params_template=params)
+    p1, o1, m1 = step(params, init_opt_state(params, ocfg), batch)
+    (_, _), grads = jax.value_and_grad(quad_loss, has_aux=True)(params, batch)
+    p2, o2, m2 = adamw_update(params, grads, init_opt_state(params, ocfg),
+                              ocfg)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_ddp_train_step_world_invariant_bitwise():
+    """Same grains, different world -> bit-identical params after a step.
+    This is the elastic-resume acceptance property at the train-step level."""
+    params, batch = quad_problem()
+    ocfg = OptConfig(lr=1e-2, warmup_steps=1, decay_steps=100)
+    outs = []
+    for world in (1, 2, 4):
+        step, _ = make_ddp_train_step(
+            None, ocfg, world=world, byte_budget=48, grains=4,
+            loss_fn=quad_loss, params_template=params)
+        p, o, m = step(params, init_opt_state(params, ocfg), batch)
+        outs.append([np.asarray(x) for x in jax.tree_util.tree_leaves(p)])
+    for other in outs[1:]:
+        for a, b in zip(outs[0], other):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_ddp_train_step_jits():
+    params, batch = quad_problem()
+    ocfg = OptConfig(lr=1e-2, warmup_steps=1, decay_steps=100)
+    step, reducer = make_ddp_train_step(
+        None, ocfg, world=2, byte_budget=64, grains=4, loss_fn=quad_loss,
+        params_template=params)
+    jstep = jax.jit(step)
+    p, o, m = jstep(params, init_opt_state(params, ocfg), batch)
+    p2, o2, m2 = step(params, init_opt_state(params, ocfg), batch)
+    for a, b in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    met = reducer().metrics()
+    assert set(met) >= {"ddp_world", "ddp_grains", "ddp_nbuckets",
+                        "ddp_bucket_bytes", "ddp_plan_cache_hits",
+                        "ddp_plan_cache_misses"}
+
+
+def test_ddp_train_step_rejects_indivisible_batch():
+    params, batch = quad_problem(batch=6)
+    ocfg = OptConfig()
+    step, _ = make_ddp_train_step(
+        None, ocfg, world=2, byte_budget=None, grains=4, loss_fn=quad_loss,
+        params_template=params)
+    with pytest.raises(ValueError):
+        step(params, init_opt_state(params, ocfg), batch)

@@ -1,0 +1,235 @@
+"""Fault-injection + elastic shrink/grow suite for the DDP layer.
+
+The acceptance property: a run interrupted by ``SimulatedFailure`` at
+seeded-random steps, resumed from checkpoint on a DIFFERENT device count
+(``run_with_restarts(elastic_worlds=...)``), reproduces the uninterrupted
+golden run's loss trajectory and final parameters **bit-exactly** — the
+payoff of the fixed-``grains`` decomposition (``world`` only re-partitions
+the allreduce SF; the reduction order is grain-major for every world).
+
+Also asserted here: the plan-cache lifecycle across restarts — a shrink or
+grow to an UNSEEN world misses (SF + bundles re-derived), returning to a
+previously-seen world hits, with the counters surfaced through
+``run_with_restarts(comm_metrics=...)`` into ``state["comm_metrics"]``.
+
+The multi-device variant runs in a subprocess with
+``--xla_force_host_platform_device_count=4`` (pattern from
+``tests/test_sf_distributed.py``) so the main pytest process keeps its
+single-device view.
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.checkpoint import CheckpointManager
+from repro.training.ddp import ddp_plan_cache, reset_ddp_plan_cache
+from repro.training.fault import SimulatedFailure, run_with_restarts
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_loop import make_ddp_train_step
+
+GRAINS = 4
+DIN, DOUT, BATCH = 6, 3, 8
+
+
+def quad_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    loss = jnp.mean(jnp.square(pred - batch["y"]))
+    return loss, {"mse": loss}
+
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.standard_normal((DIN, DOUT)) * 0.1,
+                             jnp.float32),
+            "b": jnp.zeros((DOUT,), jnp.float32)}
+
+
+def batch_at(step):
+    """Deterministic per-step data (the resumable data stream)."""
+    rng = np.random.default_rng(1000 + step)
+    wt = np.random.default_rng(99).standard_normal((DIN, DOUT))
+    x = rng.standard_normal((BATCH, DIN)).astype(np.float32)
+    y = (x @ wt).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def build_step(world):
+    ocfg = OptConfig(lr=3e-2, warmup_steps=1, decay_steps=500,
+                     weight_decay=0.0)
+    step, reducer = make_ddp_train_step(
+        None, ocfg, world=world, byte_budget=48, grains=GRAINS,
+        loss_fn=quad_loss, params_template=init_params())
+    return ocfg, step, reducer
+
+
+def golden_run(total_steps):
+    """The uninterrupted reference trajectory at the starting world."""
+    ocfg, step, _ = build_step(world=2)
+    params = init_params()
+    opt = init_opt_state(params, ocfg)
+    losses = []
+    for s in range(total_steps):
+        params, opt, m = step(params, opt, batch_at(s))
+        losses.append(np.float32(m["loss"]))
+    return losses, params
+
+
+def elastic_run(total_steps, fail_steps, elastic_worlds, ckpt_dir,
+                max_restarts=None, persistent=False):
+    """Interrupted run: SimulatedFailure fires once at each step in
+    ``fail_steps`` (every time, when ``persistent``); each restart lands on
+    the next world in ``elastic_worlds`` and rebuilds the DDP step through
+    on_restore."""
+    ocfg, step0, reducer0 = build_step(world=2)
+    params = init_params()
+    holder = {"step_fn": step0, "reducer": reducer0, "worlds": [2]}
+    pending_failures = set(fail_steps)
+    losses = {}
+
+    def step_fn(s, state):
+        if s in pending_failures:
+            if not persistent:
+                pending_failures.discard(s)
+            raise SimulatedFailure(f"node died at step {s}")
+        p, o, m = holder["step_fn"](state["tree"]["params"],
+                                    state["tree"]["opt"], batch_at(s))
+        state["tree"] = {"params": p, "opt": o}
+        losses[s] = np.float32(m["loss"])
+        return state
+
+    def on_restore(state):
+        w = int(state["world"])
+        holder["worlds"].append(w)
+        _, holder["step_fn"], holder["reducer"] = build_step(world=w)
+        return state
+
+    mgr = CheckpointManager(ckpt_dir, every=1)
+    state = {"tree": {"params": params, "opt": init_opt_state(params, ocfg)},
+             "step": 0, "world": 2}
+    out = run_with_restarts(
+        step_fn, state, mgr, total_steps=total_steps,
+        max_restarts=(len(fail_steps) + 1 if max_restarts is None
+                      else max_restarts), on_restore=on_restore,
+        elastic_worlds=elastic_worlds,
+        comm_metrics=lambda: holder["reducer"]().metrics())
+    traj = [losses[s] for s in range(total_steps)]
+    return traj, out, holder
+
+
+def test_elastic_resume_bit_exact_trajectory(tmp_path):
+    """Failures at seeded-random steps + shrink/grow across worlds ->
+    trajectory and final params BIT-equal to the uninterrupted run."""
+    reset_ddp_plan_cache()
+    total = 12
+    frng = np.random.default_rng(7)
+    fail_steps = sorted(frng.choice(np.arange(2, total), size=2,
+                                    replace=False).tolist())
+    gold_losses, gold_params = golden_run(total)
+    traj, out, holder = elastic_run(total, fail_steps,
+                                    elastic_worlds=[4, 1], ckpt_dir=str(tmp_path))
+    assert out["step"] == total
+    assert holder["worlds"] == [2, 4, 1]          # shrink then grow happened
+    np.testing.assert_array_equal(np.asarray(traj), np.asarray(gold_losses))
+    for a, b in zip(jax.tree_util.tree_leaves(gold_params),
+                    jax.tree_util.tree_leaves(out["tree"]["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_plan_cache_miss_then_hit(tmp_path):
+    """Restart onto an unseen world re-derives plans (cache MISSES grow);
+    restart back onto a seen world reuses them (only HITS grow)."""
+    reset_ddp_plan_cache()
+    total = 10
+    # two failures; elastic schedule: 2 (start) -> 4 (new) -> 2 (seen again)
+    traj, out, holder = elastic_run(total, fail_steps=[3, 6],
+                                    elastic_worlds=[4, 2],
+                                    ckpt_dir=str(tmp_path))
+    assert holder["worlds"] == [2, 4, 2]
+    cm = out["comm_metrics"]
+    assert cm["ddp_world"] == 2 and cm["ddp_grains"] == GRAINS
+    stats = ddp_plan_cache().stats()
+    # entries exist for exactly two distinct worlds (2 and 4)
+    assert stats["misses"] > 0 and stats["hits"] > 0
+    # rebuilding for the seen world once more must be pure hits
+    misses_before = stats["misses"]
+    build_step(world=4)
+    build_step(world=2)
+    after = ddp_plan_cache().stats()
+    assert after["misses"] == misses_before
+    assert after["hits"] > stats["hits"]
+    # and counters flow through the reducer metrics
+    assert cm["ddp_plan_cache_misses"] > 0
+
+
+def test_comm_metrics_snapshot_every_step(tmp_path):
+    """state['comm_metrics'] is refreshed after every successful step even
+    with no failures at all."""
+    reset_ddp_plan_cache()
+    traj, out, holder = elastic_run(4, fail_steps=[], elastic_worlds=None,
+                                    ckpt_dir=str(tmp_path))
+    cm = out["comm_metrics"]
+    assert set(cm) >= {"ddp_world", "ddp_nbuckets", "ddp_plan_cache_hits",
+                       "ddp_plan_cache_misses"}
+    assert cm["ddp_nbuckets"] >= 1
+
+
+def test_exhausted_restarts_reraises(tmp_path):
+    """More failures than max_restarts propagates the failure — fleet
+    policy: repeated crashes need human eyes."""
+    reset_ddp_plan_cache()
+    with pytest.raises(SimulatedFailure):
+        elastic_run(8, fail_steps=[2], elastic_worlds=[4],
+                    ckpt_dir=str(tmp_path), max_restarts=2, persistent=True)
+
+
+# --------------------------------------------------------------------------
+# multi-device subprocess variant
+# --------------------------------------------------------------------------
+REPO_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+TESTS = os.path.abspath(os.path.dirname(__file__))
+
+SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {tests!r})
+    import numpy as np, jax
+    assert jax.device_count() == 4, jax.device_count()
+    from test_fault_elastic import (golden_run, elastic_run,
+                                    reset_ddp_plan_cache, ddp_plan_cache)
+
+    reset_ddp_plan_cache()
+    total = 10
+    gold_losses, gold_params = golden_run(total)
+    with tempfile.TemporaryDirectory() as d:
+        traj, out, holder = elastic_run(total, fail_steps=[3, 7],
+                                        elastic_worlds=[4, 2], ckpt_dir=d)
+    assert holder["worlds"] == [2, 4, 2]
+    np.testing.assert_array_equal(np.asarray(traj), np.asarray(gold_losses))
+    for a, b in zip(jax.tree_util.tree_leaves(gold_params),
+                    jax.tree_util.tree_leaves(out["tree"]["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("ELASTIC-OK")
+    s = ddp_plan_cache().stats()
+    assert s["misses"] > 0 and s["hits"] > 0
+    assert out["comm_metrics"]["ddp_plan_cache_misses"] > 0
+    print("CACHE-OK")
+""").format(src=REPO_SRC, tests=TESTS)
+
+
+@pytest.mark.slow
+def test_elastic_resume_subprocess_multidevice():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ELASTIC-OK" in r.stdout
+    assert "CACHE-OK" in r.stdout

@@ -126,3 +126,43 @@ def test_prefill_bucketing_bounds_program_cache(setup):
     ref.run(ref_reqs)
     assert [r.out for r in reqs] == [r.out for r in ref_reqs]
     assert len(ref.metrics()["prefill_buckets"]) == len(set(lens))
+
+
+# --------------------------------------------------------------------------
+# load generator seed stability
+# --------------------------------------------------------------------------
+def test_loadgen_seed_stability_in_process():
+    """Same LoadSpec -> bit-identical trace (arrivals, tokens, budgets)."""
+    from repro.serving.loadgen import LoadSpec, synthesize, trace_fingerprint
+    spec = LoadSpec(rate_rps=80.0, n_requests=64, seed=123)
+    f1 = trace_fingerprint(synthesize(spec))
+    f2 = trace_fingerprint(synthesize(spec))
+    assert f1 == f2
+    assert f1 != trace_fingerprint(synthesize(LoadSpec(rate_rps=80.0,
+                                                       n_requests=64,
+                                                       seed=124)))
+
+
+def test_loadgen_seed_stability_cross_process():
+    """The Poisson arrival stream is bit-identical for a fixed seed across
+    PROCESSES — what keeps BENCH_serving.json runs comparable machine to
+    machine."""
+    import os
+    import subprocess
+    import sys
+    from repro.serving.loadgen import LoadSpec, synthesize, trace_fingerprint
+
+    spec = LoadSpec(rate_rps=80.0, n_requests=64, seed=123)
+    here = trace_fingerprint(synthesize(spec))
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    script = (
+        "import sys; sys.path.insert(0, %r)\n"
+        "from repro.serving.loadgen import (LoadSpec, synthesize,"
+        " trace_fingerprint)\n"
+        "print(trace_fingerprint(synthesize(LoadSpec(rate_rps=80.0,"
+        " n_requests=64, seed=123))))\n" % src)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.strip() == here

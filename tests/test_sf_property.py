@@ -1,5 +1,6 @@
 """Hypothesis property tests on star-forest invariants."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -106,6 +107,99 @@ def test_pattern_analysis_consistent(sf):
         assert n_remote == 0 and n_local > 0
     if rep.kind == pat.PERMUTE:
         assert rep.permute_dst is not None
+
+
+# --------------------------------------------------------------------------
+# DDP bucketing equivalence (the acceptance property of training/ddp.py):
+# for ANY pytree, dtype mix, and byte budget, bucketed reduce_multi grads
+# BIT-match per-tensor reduces.
+# --------------------------------------------------------------------------
+_GRAD_DTYPES = [np.float32, np.float16, np.int32]
+
+
+@st.composite
+def grad_trees(draw, max_tensors=6, max_dim=5):
+    """Random gradient pytrees: nested dict/list structure flattened to
+    1..max_tensors arrays of random shape (rank 0-3) and dtype."""
+    n = draw(st.integers(1, max_tensors))
+    leaves = []
+    for i in range(n):
+        rank = draw(st.integers(0, 3))
+        shape = tuple(draw(st.integers(1, max_dim)) for _ in range(rank))
+        dt = np.dtype(draw(st.sampled_from(_GRAD_DTYPES)))
+        seed = draw(st.integers(0, 2 ** 31 - 1))
+        rng = np.random.default_rng(seed)
+        if dt.kind == "f":
+            arr = (rng.standard_normal(shape) * 3).astype(dt)
+        else:
+            arr = rng.integers(-50, 50, shape).astype(dt)
+        leaves.append(arr)
+    # wrap into a nested structure so tree flattening is exercised too
+    if draw(st.booleans()):
+        return {"layers": leaves[: len(leaves) // 2 + 1],
+                "head": leaves[len(leaves) // 2 + 1:]}
+    return leaves
+
+
+@settings(max_examples=25, deadline=None)
+@given(grad_trees(),
+       st.one_of(st.none(), st.integers(1, 4096)),
+       st.sampled_from([(1, 2), (2, 2), (2, 4), (4, 4)]),
+       st.booleans())
+def test_ddp_bucketed_reduce_bitmatches_per_tensor(tree, budget, wg, average):
+    """Bucketed ``FieldBundle.reduce_multi`` == per-tensor SF reduces,
+    bitwise, for random pytrees, dtype mixes, and byte budgets — including
+    budgets smaller than one tensor (every tensor its own bucket), None
+    (one fused bucket), and the ragged final bucket in between."""
+    from repro.training.ddp import BucketPlan, DDPGradReducer
+    from repro.core.dynplan import PlanCache
+
+    world, grains = wg
+    plan = BucketPlan.for_tree(tree, budget)
+    # every leaf lands in exactly one bucket
+    covered = sorted(i for b in plan.buckets for i in b.leaves)
+    flat = [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+    assert covered == list(range(len(flat)))
+    if budget is not None:
+        # a tensor alone above budget sits in its own (singleton) bucket
+        for b in plan.buckets:
+            if b.nbytes > budget:
+                assert len(b.leaves) == 1
+
+    red = DDPGradReducer(plan, world, grains=grains, cache=PlanCache("t"))
+    rng = np.random.default_rng(0)
+    grain_grads = jax.tree_util.tree_map(
+        lambda x: (rng.standard_normal((grains,) + np.shape(x)) * 3
+                   ).astype(np.asarray(x).dtype), tree)
+    fused = red.allreduce(grain_grads, average=average)
+    per_tensor = red.reduce_per_tensor(grain_grads, average=average)
+    for a, b in zip(jax.tree_util.tree_leaves(fused),
+                    jax.tree_util.tree_leaves(per_tensor)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(grad_trees(), st.integers(1, 512))
+def test_ddp_bucket_plan_invariants(tree, budget):
+    """Reverse-backward order, byte accounting, and ragged final bucket."""
+    from repro.training.ddp import BucketPlan
+
+    plan = BucketPlan.for_tree(tree, budget)
+    flat = jax.tree_util.tree_leaves(tree)
+    nb = [int(np.prod(np.shape(x)) or 1) * np.dtype(x.dtype).itemsize
+          for x in flat]
+    seen = []
+    for b in plan.buckets:
+        # bucket byte count is the sum of its member payloads
+        assert b.nbytes == sum(nb[i] for i in b.leaves)
+        # multi-tensor buckets never exceed the budget
+        if len(b.leaves) > 1:
+            assert b.nbytes <= budget or \
+                b.nbytes - nb[b.leaves[-1]] < budget
+        seen.extend(b.leaves)
+    # reverse-backward order: concatenated leaves run n-1 .. 0
+    assert seen == list(reversed(range(len(flat))))
 
 
 def test_strided_detection_roundtrip():

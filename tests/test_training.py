@@ -169,6 +169,54 @@ def test_straggler_detector():
     assert det.observe(1.5)
 
 
+def test_straggler_detector_constant_history_no_false_positive():
+    """Cold-start burst of IDENTICAL step times -> sd == 0; the sd floor
+    must keep the next *normal* step (tiny jitter) from being flagged.
+    Without the floor, (0.1001 - 0.1) / 1e-9 clears any threshold."""
+    det = StragglerDetector(window=20, z_threshold=3.0)
+    for _ in range(15):
+        assert not det.observe(0.1)
+    assert not det.observe(0.1001)       # 0.1% jitter: NOT a straggler
+    assert not det.observe(0.105)        # 5% jitter: still within floor
+    assert det.observe(0.5)              # a real 5x straggler still flags
+
+
+def test_straggler_detector_relative_floor_scales_with_mean():
+    """The floor is relative: the same ABSOLUTE jitter that is noise on
+    slow steps is also noise on fast steps (floor = min_rel_sd * mean)."""
+    det = StragglerDetector(window=20, z_threshold=3.0, min_rel_sd=0.05)
+    for _ in range(12):
+        det.observe(10.0)
+    # 10.0 * 0.05 * 3.0 = 1.5 above the mean is the flag line
+    assert not det.observe(11.0)
+    assert det.observe(12.0)
+
+
+def test_straggler_detector_window_eviction():
+    """Only the trailing ``window`` observations form the baseline: after
+    the window slides past a slow early era, the new fast era is the norm
+    and an old-era time IS an outlier."""
+    det = StragglerDetector(window=10, z_threshold=3.0)
+    for _ in range(10):
+        det.observe(1.0)                 # slow era
+    for _ in range(10):
+        det.observe(0.1)                 # fast era fills the whole window
+    assert len(det.history) == 20        # history keeps everything...
+    assert det.observe(1.0)              # ...but the window forgot the slow era
+    det2 = StragglerDetector(window=100, z_threshold=3.0)
+    for _ in range(10):
+        det2.observe(1.0)
+    for _ in range(10):
+        det2.observe(0.1)
+    assert not det2.observe(1.0)         # wide window still remembers it
+
+
+def test_straggler_detector_warmup_never_flags():
+    det = StragglerDetector(window=50)
+    assert not any(det.observe(t) for t in
+                   [0.1, 9.9, 0.1, 5.0, 0.1, 0.1, 0.1, 0.1, 0.1])
+
+
 def test_data_determinism_and_resume():
     ds = SyntheticLM(vocab=100, seq_len=8, batch=4, seed=3)
     b1 = ds.batch_at(17)
