@@ -14,6 +14,10 @@ artifacts:
   ``benchmarks/bench_ddp.py`` (deep 24-layer stack, quarter-total byte
   budget) and fails when us/call regresses more than ``THRESHOLD``× vs
   the committed ``BENCH_ddp.json`` baseline.
+* **assembly** — re-measures the fixed warm stash re-assembly scenario of
+  ``benchmarks/bench_assembly.py`` (32×32 FD Laplacian over 4 ranks,
+  flush-SF cache warm) and fails when us/call regresses more than
+  ``THRESHOLD``× vs the committed ``BENCH_assembly.json`` baseline.
 
 Each gate skips gracefully (with a reason) when there is nothing sound to
 compare against: no committed artifact, an artifact without the
@@ -146,8 +150,31 @@ def guard_ddp() -> int:
     return 0
 
 
+def guard_assembly() -> int:
+    """us/call gate on the fixed warm stash re-assembly scenario."""
+    from benchmarks.bench_assembly import GUARD_NAME, run_guard_scenario
+
+    obj, reason = _load_baseline("BENCH_assembly.json")
+    if obj is None:
+        return _skip(reason)
+    base = obj.get("guard", {}).get(GUARD_NAME)
+    if not base:
+        return _skip(f"baseline has no {GUARD_NAME!r} guard scenario")
+
+    fresh = run_guard_scenario()
+    ratio = fresh / float(base)        # >1 means we got SLOWER
+    line = (f"perf-guard: {GUARD_NAME} fresh={fresh:.0f}us "
+            f"baseline={float(base):.0f}us slowdown={ratio:.2f}x "
+            f"(threshold {THRESHOLD}x)")
+    if ratio > THRESHOLD:
+        print(line + "  FAIL")
+        return 1
+    print(line + "  OK")
+    return 0
+
+
 def main() -> int:
-    return max(guard_pack(), guard_serving(), guard_ddp())
+    return max(guard_pack(), guard_serving(), guard_ddp(), guard_assembly())
 
 
 if __name__ == "__main__":

@@ -18,11 +18,11 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: "
                          "pingpong,async,cg,meshdist,spmm,kernels,halo,"
-                         "serving,ddp")
+                         "serving,ddp,assembly")
     args = ap.parse_args()
-    from benchmarks import (bench_async, bench_cg, bench_ddp, bench_halo,
-                            bench_kernels, bench_meshdist, bench_pingpong,
-                            bench_serving, bench_spmm)
+    from benchmarks import (bench_assembly, bench_async, bench_cg, bench_ddp,
+                            bench_halo, bench_kernels, bench_meshdist,
+                            bench_pingpong, bench_serving, bench_spmm)
     suites = {
         "pingpong": bench_pingpong.run,
         "async": bench_async.run,
@@ -33,6 +33,7 @@ def main() -> None:
         "halo": bench_halo.run,
         "serving": bench_serving.run,
         "ddp": bench_ddp.run,
+        "assembly": bench_assembly.run,
     }
     wanted = list(suites) if args.only == "all" else args.only.split(",")
     print("name,us_per_call,derived")

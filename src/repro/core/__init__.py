@@ -13,6 +13,8 @@ Public API:
   SFOps                      jit/grad-friendly ops on global arrays
   DistSF                     shard_map lowering to jax.lax collectives
   compose, compose_inverse, embed_roots, embed_leaves, make_multi_sf
+                             §2 derived SFs (overlap growth / multigrid
+                             transfers / stash assembly build on these)
   patterns.analyze           §5.2 pattern discovery / collective selection
   redplan                    shared sort-segment reduction machinery (§3.3)
 """

@@ -532,6 +532,15 @@ class SFComm:
     fusion), use :meth:`bcast_multi` / :meth:`reduce_multi`, which route
     through a cached :class:`repro.core.fields.FieldBundle`.
 
+    The StarForest handed in may itself be *derived* from other SFs via
+    :mod:`repro.core.compose` (paper §2) — composed, inverse-composed and
+    embedded graphs communicate exactly like hand-built ones.  The README
+    section "Composed SFs: overlap growth, multigrid, and assembly"
+    diagrams the three load-bearing consumers
+    (:func:`repro.meshdist.plex.grow_overlap`,
+    :class:`repro.solvers.multigrid.Transfer`,
+    :class:`repro.sparse.parmat.MatAssembler`).
+
     Backend auto-selection is *measurement-driven* when compatible shipped
     benchmark artifacts exist (see :mod:`repro.core.priors`), and the Pallas
     backend autotunes its kernel block shapes on first use per communication

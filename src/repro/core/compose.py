@@ -1,4 +1,5 @@
-"""SF composition and embedding (paper §3.3).
+"""SF composition and embedding (paper §2, "creating new SFs from existing
+ones"; same numbering as ROADMAP.md and the README concept map).
 
 ``compose(A, B)``         — A's leaves overlap B's roots; result AB has A's
                             roots and B's leaves (data redistribution chains).
@@ -15,6 +16,18 @@ These are host-side graph algebra on the template (numpy), matching how
 PETSc builds them once at setup time.  The distributed construction the paper
 describes (SFBcast of root addresses over B) is exactly what these loops
 compute; with the template globally known the bcast is a gather.
+
+Load-bearing consumers (diagrammed in README "Composed SFs: overlap growth,
+multigrid, and assembly"):
+
+* :func:`repro.meshdist.plex.grow_overlap` — ``compose`` chains a
+  cell->vertex incidence SF with a vertex fan-out SF to derive n-level
+  ghost halos without rebuilding the mesh.
+* :class:`repro.solvers.multigrid.Transfer` — ``embed_leaves`` extracts the
+  injection subgraph from the interpolation-slot SF between DMDA levels.
+* :class:`repro.sparse.parmat.MatAssembler` — ``compose_inverse`` over the
+  row-ownership dof-SF turns the off-process stash flush into ONE SF
+  reduce (pyop2/PETSc MatStash style).
 """
 
 from __future__ import annotations

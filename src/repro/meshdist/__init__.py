@@ -1,0 +1,21 @@
+"""Mesh distribution on star forests (paper §2/§6.3): DMDA structured
+grids, Plex-style unstructured distribution, Sections, and §2 composed-SF
+overlap growth."""
+
+from .dmda import DMDA
+from .plex import (DistributedMesh, HexMesh, Overlap, distribute,
+                   grow_overlap, initial_distribution, make_vertex_sf)
+from .section import Section, apply_section
+
+__all__ = [
+    "DMDA",
+    "DistributedMesh",
+    "HexMesh",
+    "Overlap",
+    "Section",
+    "apply_section",
+    "distribute",
+    "grow_overlap",
+    "initial_distribution",
+    "make_vertex_sf",
+]

@@ -212,6 +212,37 @@ class DMDA:
         rank, root = self.owner_of(coords)
         return self.owned_offsets[rank] + root
 
+    # -------------------------------------------------- refinement levels
+    def coarsen(self) -> "DMDA":
+        """Vertex-centered coarsening (DMCoarsen): every odd extent
+        ``n = 2m+1`` drops to ``m+1`` by keeping the even-index points.
+        The proc grid, stencil, width and interior mode are inherited, so
+        multigrid levels share their communication structure."""
+        for d, e in enumerate(self.shape):
+            if self.periodic[d]:
+                raise ValueError("coarsen supports non-periodic grids only")
+            if e < 3 or e % 2 == 0:
+                raise ValueError(f"cannot coarsen extent {e} (need odd >= 3)")
+        new_shape = tuple((e - 1) // 2 + 1 for e in self.shape)
+        for e, p in zip(new_shape, self.proc_grid):
+            if p > e:
+                raise ValueError(f"coarse extent {e} smaller than proc-grid "
+                                 f"axis {p}; stop coarsening earlier")
+        return DMDA(new_shape, self.nranks, proc_grid=self.proc_grid,
+                    stencil=self.stencil, width=self.width,
+                    periodic=self.periodic, interior=self.interior)
+
+    def refine(self) -> "DMDA":
+        """Vertex-centered refinement (DMRefine): extent ``n`` grows to
+        ``2n-1``; coarse point ``c`` coincides with fine point ``2c``."""
+        for d in range(self.ndim):
+            if self.periodic[d]:
+                raise ValueError("refine supports non-periodic grids only")
+        new_shape = tuple(2 * e - 1 for e in self.shape)
+        return DMDA(new_shape, self.nranks, proc_grid=self.proc_grid,
+                    stencil=self.stencil, width=self.width,
+                    periodic=self.periodic, interior=self.interior)
+
     # --------------------------------------------------------------- build
     def _build(self) -> None:
         R = self.nranks

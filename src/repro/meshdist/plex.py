@@ -27,12 +27,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import SFComm, StarForest
+from ..core import SFComm, StarForest, compose
 from .section import Section, apply_section
 
 __all__ = ["HexMesh", "DistributedMesh", "initial_distribution",
            "distribute", "make_vertex_sf", "global_to_local",
-           "local_to_global"]
+           "local_to_global", "Overlap", "grow_overlap"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -273,3 +273,197 @@ def local_to_global(vsf: StarForest, dof_per_vertex: int,
     out = ops.reduce(jnp.asarray(local_vec), jnp.asarray(local_vec.copy()),
                      "sum")
     return np.asarray(out)
+
+
+# --------------------------------------------------------- overlap growth
+@dataclasses.dataclass
+class Overlap:
+    """n-level cell halo derived by SF composition (DMPlexDistributeOverlap).
+
+    ``cells[q]`` lists rank q's local cell region — owned cells first, then
+    halo cells ordered by (level, global id); ``level[q]`` tags each local
+    cell with its BFS distance (0 = owned).  ``sf`` connects every local
+    cell to its owner's copy (owned cells as self edges, like DMDA
+    ``interior='connect'``), so one SFBcast realizes the whole
+    overlap-aware DMGlobalToLocal.
+    """
+    dm: DistributedMesh
+    levels: int
+    cells: List[np.ndarray]
+    level: List[np.ndarray]
+    sf: StarForest
+    adjacency_sfs: List[StarForest]   # per grown level, the composed SF
+
+    @property
+    def nranks(self) -> int:
+        return self.dm.nranks
+
+    def cell_offsets(self) -> np.ndarray:
+        return self.sf.leaf_offsets()
+
+    def global_to_local(self, cell_data: np.ndarray,
+                        backend: Optional[str] = None) -> np.ndarray:
+        """Exchange per-owned-cell data (``(ncells_owned_total, *unit)``, in
+        the rank-concatenated order of ``dm.cells``) into the overlap
+        regions: one SFBcast over the overlap SF."""
+        root = jnp.asarray(cell_data)
+        leaf = jnp.zeros((self.sf.nleafspace_total,) + root.shape[1:],
+                         root.dtype)
+        return SFComm(self.sf, backend=backend).bcast(root, leaf, "replace")
+
+
+def _vertex_owner_map(dm: DistributedMesh, vsf: StarForest) -> Dict[int, int]:
+    """Global vertex id -> owner rank, read off the vertex SF (leaves point
+    at their owner's root copy; vertices with no leaf edge anywhere are
+    owned where they live)."""
+    owner: Dict[int, int] = {}
+    for r in range(dm.nranks):
+        g = vsf.graph(r)
+        ghost = set(int(l) for l in g.local)
+        for li, v in enumerate(dm.local_verts[r]):
+            if li not in ghost:
+                owner[int(v)] = r
+    for r in range(dm.nranks):
+        g = vsf.graph(r)
+        for i in range(g.nleaves):
+            v = int(dm.local_verts[r][int(g.local[i])])
+            owner[v] = int(g.remote_rank[i])
+    return owner
+
+
+def grow_overlap(dm: DistributedMesh, vsf: Optional[StarForest] = None,
+                 levels: int = 1, backend: Optional[str] = None) -> Overlap:
+    """Grow an n-level cell overlap by SF composition (paper §2 derived SFs;
+    PETSc's DMPlexDistributeOverlap).
+
+    Two SFs are composed per level, leaf-of-leaf via :func:`compose`:
+
+    * **A** (cell->vertex incidence, built once): roots are owned cells;
+      rank m's leaves are one slot per (owned vertex v, incident cell)
+      pair, each connected to that cell's owner — m's rows of the
+      distributed vertex-to-cell incidence table.
+    * **B** (vertex fan-out, rebuilt as the known region grows): roots are
+      A's leaf slots; rank q's leaves request the full incidence row of
+      every vertex q currently knows.
+
+    ``compose(A, B)`` therefore maps owned cells directly to every rank
+    that knows one of their vertices.  One SFBcast of ``[cell id | cone]``
+    (unit ``(9,)`` int32) over the composed SF then delivers both the next
+    halo ring and the cone data needed to extend the known-vertex set for
+    the following level — the mesh is never rebuilt.
+    """
+    if levels < 1:
+        raise ValueError("levels must be >= 1")
+    R = dm.nranks
+    if dm.local_verts is None:
+        dm.setup_local()
+    if vsf is None:
+        vsf = make_vertex_sf(dm)
+    owner = _vertex_owner_map(dm, vsf)
+
+    # Directory: current owner rank / local index of every global cell.
+    ncells = dm.mesh.ncells
+    cur_rank = np.full(ncells, -1, dtype=np.int64)
+    cur_off = np.full(ncells, -1, dtype=np.int64)
+    for r in range(R):
+        cur_rank[dm.cells[r]] = r
+        cur_off[dm.cells[r]] = np.arange(dm.cells[r].shape[0])
+
+    # Global vertex -> sorted incident cells (from the distributed cones).
+    incidence: Dict[int, set] = {}
+    for r in range(R):
+        for ci, c in enumerate(dm.cells[r]):
+            for v in dm.cones[r][ci]:
+                incidence.setdefault(int(v), set()).add(int(c))
+    incidence_l = {v: np.asarray(sorted(cs), dtype=np.int64)
+                   for v, cs in incidence.items()}
+
+    # ---- A: cell->vertex incidence SF (fixed across levels).
+    owned_verts = [sorted(v for v, o in owner.items() if o == m)
+                   for m in range(R)]
+    slot_base: List[Dict[int, int]] = []
+    A = StarForest(R)
+    for m in range(R):
+        base: Dict[int, int] = {}
+        rem: List[Tuple[int, int]] = []
+        cursor = 0
+        for v in owned_verts[m]:
+            base[v] = cursor
+            for c in incidence_l[v]:
+                rem.append((int(cur_rank[c]), int(cur_off[c])))
+                cursor += 1
+        slot_base.append(base)
+        A.set_graph(m, int(dm.cells[m].shape[0]), None,
+                    np.asarray(rem, dtype=np.int64).reshape(-1, 2),
+                    nleafspace=max(cursor, 1))
+    A.setup()
+
+    # Per-rank growth state: known vertices and known cells.
+    known_verts = [set(int(v) for v in dm.local_verts[r]) for r in range(R)]
+    known_cells = [set(int(c) for c in dm.cells[r]) for r in range(R)]
+    halo_cells: List[List[np.ndarray]] = [[] for _ in range(R)]
+
+    # Root payload: [cell id | 8-vertex cone] per owned cell, unit (9,).
+    payload = np.concatenate(
+        [np.concatenate([dm.cells[r].reshape(-1, 1), dm.cones[r]], axis=1)
+         for r in range(R)]).astype(np.int32) \
+        if sum(c.shape[0] for c in dm.cells) else np.zeros((0, 9), np.int32)
+
+    adjacency_sfs: List[StarForest] = []
+    for _ in range(levels):
+        # ---- B: fan-out SF over the current known-vertex sets.
+        B = StarForest(R)
+        nslots_q = []
+        for q in range(R):
+            rem = []
+            for v in sorted(known_verts[q]):
+                m = owner[v]
+                b = slot_base[m][v]
+                for j in range(incidence_l[v].shape[0]):
+                    rem.append((m, b + j))
+            nslots_q.append(len(rem))
+            B.set_graph(q, A.graph(q).nleafspace, None,
+                        np.asarray(rem, dtype=np.int64).reshape(-1, 2),
+                        nleafspace=max(len(rem), 1))
+        AB = compose(A, B)
+        adjacency_sfs.append(AB)
+
+        leaf = np.asarray(SFComm(AB, backend=backend).bcast(
+            jnp.asarray(payload),
+            jnp.zeros((AB.nleafspace_total, 9), jnp.int32), "replace"))
+        lo = AB.leaf_offsets()
+        for q in range(R):
+            seen = leaf[lo[q]: lo[q] + nslots_q[q]]
+            fresh = np.unique(seen[:, 0].astype(np.int64))
+            fresh = np.asarray([c for c in fresh
+                                if int(c) not in known_cells[q]],
+                               dtype=np.int64)
+            halo_cells[q].append(fresh)
+            known_cells[q].update(int(c) for c in fresh)
+            if fresh.size:
+                # any slot row with a matching id works: cones are global
+                srt = seen[np.argsort(seen[:, 0], kind="stable")]
+                idx = np.searchsorted(srt[:, 0].astype(np.int64), fresh)
+                for row in srt[idx]:
+                    known_verts[q].update(int(v) for v in row[1:])
+
+    # ---- final overlap SF: roots = owned cells, leaves = owned + halo.
+    out_cells, out_level = [], []
+    osf = StarForest(R)
+    for q in range(R):
+        own = dm.cells[q].astype(np.int64)
+        halos = halo_cells[q]
+        cells_q = np.concatenate([own] + halos) if halos else own.copy()
+        lev_q = np.concatenate(
+            [np.zeros(own.shape[0], np.int64)]
+            + [np.full(h.shape[0], k + 1, np.int64)
+               for k, h in enumerate(halos)]) if halos \
+            else np.zeros(own.shape[0], np.int64)
+        rem = np.stack([cur_rank[cells_q], cur_off[cells_q]], axis=1) \
+            if cells_q.size else np.zeros((0, 2), np.int64)
+        osf.set_graph(q, int(own.shape[0]), None, rem,
+                      nleafspace=max(int(cells_q.shape[0]), 1))
+        out_cells.append(cells_q)
+        out_level.append(lev_q)
+    return Overlap(dm, levels, out_cells, out_level, osf.setup(),
+                   adjacency_sfs)

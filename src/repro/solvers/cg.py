@@ -53,51 +53,66 @@ class CGResult:
     converged: bool
 
 
-def _step(matvec, x, r, p, rz):
-    """One CG iteration (no preconditioner, as in the paper's test)."""
+def _step(matvec, x, r, p, rz, M=None):
+    """One (preconditioned) CG iteration.  With ``M=None`` this is exactly
+    the paper's unpreconditioned loop (z = r); with a preconditioner the
+    step returns both rz = <r, z> (for beta) and <r, r> (for the residual
+    convergence check)."""
     Ap = matvec(p)
     alpha = rz / jnp.vdot(p, Ap)
     x = x + alpha * p
     r = r - alpha * Ap
-    rz_new = jnp.vdot(r, r)
+    z = r if M is None else M(r)
+    rz_new = jnp.vdot(r, z)
     beta = rz_new / rz
-    p = r + beta * p
-    return x, r, p, rz_new
+    p = z + beta * p
+    rr = rz_new if M is None else jnp.vdot(r, r)
+    return x, r, p, rz_new, rr
 
 
 def cg(matvec: Callable, b: jnp.ndarray, x0: Optional[jnp.ndarray] = None,
-       *, tol: float = 1e-8, maxiter: int = 500) -> CGResult:
+       *, tol: float = 1e-8, maxiter: int = 500,
+       M: Optional[Callable] = None) -> CGResult:
     """Host-stepped CG: one jitted iteration per host turn + host-side
     convergence check (the paper's blocking baseline).  ``matvec`` may be a
-    callable or an SF-backed operator accepted by :func:`as_matvec`."""
+    callable or an SF-backed operator accepted by :func:`as_matvec`.
+
+    ``M`` is an optional (left, SPD) preconditioner applied as ``z = M(r)``
+    — e.g. ``cg(A, b, M=mg.vcycle)`` for the V-cycle of
+    :class:`repro.solvers.multigrid.Multigrid`.  Convergence is still
+    judged on the true residual norm ||r||."""
     matvec = as_matvec(matvec)
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)
-    p = r
-    rz = jnp.vdot(r, r)
+    z = r if M is None else M(r)
+    p = z
+    rz = jnp.vdot(r, z)
+    rr = rz if M is None else jnp.vdot(r, r)
     bnorm = float(jnp.sqrt(jnp.vdot(b, b)))
-    step = jax.jit(lambda x, r, p, rz: _step(matvec, x, r, p, rz))
+    step = jax.jit(lambda x, r, p, rz: _step(matvec, x, r, p, rz, M))
     it = 0
-    rnorm = float(jnp.sqrt(rz))
+    rnorm = float(jnp.sqrt(rr))
     while it < maxiter:
         # host reads the residual -> device/host sync every iteration,
         # mirroring VecDot + host convergence check in the paper's CG
         if rnorm <= tol * max(bnorm, 1e-30):
             return CGResult(x, it, rnorm, True)
-        x, r, p, rz = step(x, r, p, rz)
-        rnorm = float(jnp.sqrt(rz))   # blocking host readback
+        x, r, p, rz, rr = step(x, r, p, rz)
+        rnorm = float(jnp.sqrt(rr))   # blocking host readback
         it += 1
     return CGResult(x, it, rnorm, rnorm <= tol * max(bnorm, 1e-30))
 
 
 def cg_async(matvec: Callable, b: jnp.ndarray,
              x0: Optional[jnp.ndarray] = None, *, tol: float = 1e-8,
-             maxiter: int = 500, check_every: int = 1) -> CGResult:
+             maxiter: int = 500, check_every: int = 1,
+             M: Optional[Callable] = None) -> CGResult:
     """Fully fused CG: the entire loop is one ``lax.while_loop`` on device.
 
     Convergence is checked on device every ``check_every`` iterations (the
     paper's CGAsync checks never and runs to maxiter; pass
-    ``check_every=0`` for that exact behaviour)."""
+    ``check_every=0`` for that exact behaviour).  ``M`` is the optional
+    preconditioner of :func:`cg`; it is traced into the fused loop."""
     matvec = as_matvec(matvec)
     x = jnp.zeros_like(b) if x0 is None else x0
     # One eager application before tracing: an SF-backed matvec autotunes
@@ -109,14 +124,16 @@ def cg_async(matvec: Callable, b: jnp.ndarray,
 
     def run(x, b):
         r = b - matvec(x)
-        p = r
-        rz = jnp.vdot(r, r)
+        z = r if M is None else M(r)
+        p = z
+        rz = jnp.vdot(r, z)
+        rr = rz if M is None else jnp.vdot(r, r)
         b2 = jnp.vdot(b, b)
         tol2 = jnp.asarray(tol, rz.dtype) ** 2 * jnp.maximum(b2, 1e-30)
 
         def cond(state):
-            x, r, p, rz, it = state
-            not_done = rz > tol2
+            x, r, p, rz, rr, it = state
+            not_done = rr > tol2
             if check_every == 0:
                 not_done = jnp.asarray(True)
             elif check_every > 1:
@@ -126,13 +143,13 @@ def cg_async(matvec: Callable, b: jnp.ndarray,
             return jnp.logical_and(it < maxiter, not_done)
 
         def body(state):
-            x, r, p, rz, it = state
-            x, r, p, rz = _step(matvec, x, r, p, rz)
-            return (x, r, p, rz, it + 1)
+            x, r, p, rz, rr, it = state
+            x, r, p, rz, rr = _step(matvec, x, r, p, rz, M)
+            return (x, r, p, rz, rr, it + 1)
 
-        state = (x, r, p, rz, jnp.asarray(0, jnp.int32))
-        x, r, p, rz, it = jax.lax.while_loop(cond, body, state)
-        return x, jnp.sqrt(rz), it
+        state = (x, r, p, rz, rr, jnp.asarray(0, jnp.int32))
+        x, r, p, rz, rr, it = jax.lax.while_loop(cond, body, state)
+        return x, jnp.sqrt(rr), it
 
     run_j = jax.jit(run)
     x, rnorm, it = run_j(x, b)

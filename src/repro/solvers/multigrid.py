@@ -1,0 +1,231 @@
+"""Geometric multigrid on DMDA hierarchies, with SF-expressed transfers.
+
+The paper's §2 derived-SF machinery "in anger": PETSc's PCMG builds its
+grid transfers once as matrices whose communication is a VecScatter; here
+the transfer between two :class:`repro.meshdist.dmda.DMDA` refinement
+levels IS a star forest — roots are the coarse points, leaves are
+*interpolation slots* (one per (fine point, contributing coarse point)
+pair), and the tensor-product linear weights ride next to the SF as a
+per-slot array.  Prolongation is then one SFBcast followed by a weighted
+segment-sum; restriction is the exact transpose: a weighted SFReduce.
+Injection (the weight-1 subgraph where fine and coarse points coincide) is
+extracted with :func:`repro.core.compose.embed_leaves` — no new graph is
+built, the embedded SF communicates on the same slot buffers.
+
+Galerkin coarse operators come from the existing ``ParCSR.ptap`` (paper
+§6.4), whose off-process assembly routes through the stash/compose_inverse
+path of :mod:`repro.sparse.parmat`.  The V-cycle smoother is weighted
+Jacobi on ``ParCSR.spmv`` — every halo exchange goes through ``SFComm``
+split-phase begin/end, so the whole preconditioner runs on any registered
+backend.  Plug into CG as ``cg(A.spmv, b, M=mg.vcycle)``.
+
+See README "Composed SFs: overlap growth, multigrid, and assembly".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from itertools import product
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import SFComm, StarForest, UnitSpec, embed_leaves
+from ..meshdist.dmda import DMDA
+from ..sparse.parmat import ParCSR
+
+__all__ = ["Transfer", "Multigrid", "build_hierarchy"]
+
+
+def _contributors_1d(f: int) -> List[Tuple[int, float]]:
+    """Coarse contributors of fine index ``f`` along one dim: coincident
+    point (weight 1) on even indices, the two flanking coarse points
+    (weight 1/2) on odd ones — vertex-centered linear interpolation."""
+    if f % 2 == 0:
+        return [(f // 2, 1.0)]
+    return [((f - 1) // 2, 0.5), ((f + 1) // 2, 0.5)]
+
+
+class Transfer:
+    """Prolongation/restriction between one fine/coarse DMDA pair.
+
+    The SF: roots = coarse points (coarse global ordering), rank r's
+    leaves = r's interpolation slots, grouped contiguously per owned fine
+    point.  ``prolong`` = SFBcast + weighted segment-sum; ``restrict`` =
+    weighted SFReduce (exactly P^T, the Galerkin-consistent pairing).
+    """
+
+    def __init__(self, fine: DMDA, coarse: DMDA,
+                 backend: Optional[str] = None, dtype=np.float32):
+        if fine.nranks != coarse.nranks:
+            raise ValueError("fine and coarse DMDA must share ranks")
+        if tuple(2 * e - 1 for e in coarse.shape) != fine.shape:
+            raise ValueError(f"coarse {coarse.shape} does not refine to "
+                             f"fine {fine.shape}")
+        self.fine, self.coarse = fine, coarse
+        R = fine.nranks
+        sf = StarForest(R)
+        w_l, seg_l, ccol_l = [], [], []
+        self.nslots = []
+        for r in range(R):
+            nat = fine.box_coords(fine.owned_box(r))      # owned fine points
+            frow = fine.owned_offsets[r] + np.arange(nat.shape[0])
+            cco, ww, seg = [], [], []
+            for i in range(nat.shape[0]):
+                per_dim = [_contributors_1d(int(c)) for c in nat[i]]
+                for combo in product(*per_dim):
+                    cco.append([c for c, _ in combo])
+                    ww.append(float(np.prod([w for _, w in combo])))
+                    seg.append(int(frow[i]))
+            cco = np.asarray(cco, dtype=np.int64).reshape(-1, fine.ndim)
+            rank, off = coarse.owner_of(cco) if cco.size else \
+                (np.zeros(0, np.int64), np.zeros(0, np.int64))
+            sf.set_graph(r, int(coarse.owned_counts[r]), None,
+                         np.stack([rank, off], axis=1) if cco.size
+                         else np.zeros((0, 2), np.int64),
+                         nleafspace=max(len(ww), 1))
+            w_l.append(np.asarray(ww, dtype=dtype))
+            seg_l.append(np.asarray(seg, dtype=np.int64))
+            ccol_l.append(coarse.owned_offsets[rank] + off)
+            self.nslots.append(len(ww))
+        self.sf = sf.setup()
+        self.weights = np.concatenate(w_l)
+        self.seg_ids = np.concatenate(seg_l)
+        self.coarse_cols = np.concatenate(ccol_l)
+        self.dtype = dtype
+        # unit-aware comm: multi-RHS (nc, k) payloads ride the same plan
+        self.comm = SFComm(self.sf, backend=backend, unit=UnitSpec())
+        self._w = jnp.asarray(self.weights)
+        self._seg = jnp.asarray(self.seg_ids)
+        # injection = the weight-1 subgraph (fine/coarse coincident points),
+        # extracted WITHOUT remapping: the embedded SF shares slot buffers.
+        sel = [np.flatnonzero(w_l[r] == 1.0) for r in range(R)]
+        self.injection_sf = embed_leaves(self.sf, sel)
+        self._inj_comm = SFComm(self.injection_sf, backend=backend)
+
+    @property
+    def nfine(self) -> int:
+        return self.fine.nglobal
+
+    @property
+    def ncoarse(self) -> int:
+        return self.coarse.nglobal
+
+    def _spread(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Broadcast-compatible weight view for payloads with unit dims."""
+        w = self._w
+        return w.reshape(w.shape + (1,) * (x.ndim - 1))
+
+    def prolong(self, xc: jnp.ndarray) -> jnp.ndarray:
+        """x_f = P x_c: one SFBcast of the coarse vector into the slots,
+        then a weighted segment-sum per fine point."""
+        xc = jnp.asarray(xc)
+        slots = self.comm.bcast(
+            xc, jnp.zeros((self.sf.nleafspace_total,) + xc.shape[1:],
+                          xc.dtype), "replace")
+        return jax.ops.segment_sum(slots * self._spread(slots), self._seg,
+                                   num_segments=self.nfine,
+                                   indices_are_sorted=True)
+
+    def restrict(self, xf: jnp.ndarray) -> jnp.ndarray:
+        """x_c = P^T x_f: weight the slots, one SFReduce(SUM) to coarse."""
+        xf = jnp.asarray(xf)
+        leaf = jnp.take(xf, self._seg, axis=0)
+        leaf = leaf * self._spread(leaf)
+        return self.comm.reduce(
+            leaf, jnp.zeros((self.ncoarse,) + xf.shape[1:], xf.dtype), "sum")
+
+    def inject(self, xc: jnp.ndarray) -> jnp.ndarray:
+        """Direct injection: coarse values land on the coincident fine
+        points (0 elsewhere) — a bcast over the embedded weight-1 SF."""
+        xc = jnp.asarray(xc)
+        slots = self._inj_comm.bcast(
+            xc, jnp.zeros((self.sf.nleafspace_total,) + xc.shape[1:],
+                          xc.dtype), "replace")
+        return jax.ops.segment_sum(slots, self._seg,
+                                   num_segments=self.nfine,
+                                   indices_are_sorted=True)
+
+    def as_parcsr(self, backend: Optional[str] = None) -> ParCSR:
+        """P as a distributed matrix (rows = fine, cols = coarse) for the
+        Galerkin product ``A.ptap(P)``."""
+        return ParCSR.from_global_coo(
+            self.fine.nranks, self.nfine, self.ncoarse,
+            self.seg_ids, self.coarse_cols, self.weights.astype(np.float64),
+            row_offsets=self.fine.owned_offsets,
+            col_offsets=self.coarse.owned_offsets,
+            dtype=self.dtype, backend=backend)
+
+
+def build_hierarchy(da: DMDA, nlevels: int) -> List[DMDA]:
+    """[fine, ..., coarse] by repeated vertex-centered coarsening."""
+    das = [da]
+    for _ in range(nlevels - 1):
+        das.append(das[-1].coarsen())
+    return das
+
+
+class Multigrid:
+    """Geometric-multigrid V-cycle preconditioner on a DMDA hierarchy.
+
+    Levels hold Galerkin operators ``A_{l+1} = P_l^T A_l P_l`` (via
+    ``ParCSR.ptap``), weighted-Jacobi smoothing (``omega`` = 2/3 default),
+    and a dense pseudo-inverse direct solve on the coarsest grid.  The
+    object is callable/traceable: ``vcycle`` is pure jnp -> jnp, so it can
+    be passed as ``M=`` to :func:`repro.solvers.cg.cg` (host-stepped) or
+    traced into the fused ``cg_async`` while_loop.
+    """
+
+    def __init__(self, da: DMDA, A: Optional[ParCSR] = None, *,
+                 nlevels: int = 2, nu_pre: int = 1, nu_post: int = 1,
+                 omega: float = 2.0 / 3.0,
+                 coeffs: Optional[Sequence[float]] = None,
+                 backend: Optional[str] = None):
+        if nlevels < 1:
+            raise ValueError("nlevels must be >= 1")
+        self.das = build_hierarchy(da, nlevels)
+        self.nu_pre, self.nu_post = int(nu_pre), int(nu_post)
+        self.omega = float(omega)
+        self.ops: List[ParCSR] = [
+            A if A is not None else ParCSR.from_dmda_stencil(da, coeffs)]
+        self.transfers: List[Transfer] = []
+        for l in range(nlevels - 1):
+            t = Transfer(self.das[l], self.das[l + 1], backend=backend)
+            self.transfers.append(t)
+            self.ops.append(self.ops[l].ptap(t.as_parcsr()))
+        self.diags: List[jnp.ndarray] = []
+        for Al in self.ops:
+            d = Al.diagonal()
+            d[d == 0.0] = 1.0          # keep Jacobi well defined on holes
+            self.diags.append(jnp.asarray(d, jnp.float32))
+        self._coarse_inv = jnp.asarray(
+            np.linalg.pinv(self.ops[-1].toarray()), jnp.float32)
+
+    @property
+    def nlevels(self) -> int:
+        return len(self.ops)
+
+    def _smooth(self, l: int, x: jnp.ndarray, b: jnp.ndarray,
+                nu: int) -> jnp.ndarray:
+        A, d = self.ops[l], self.diags[l]
+        for _ in range(nu):
+            x = x + self.omega * (b - A.spmv(x)) / d
+        return x
+
+    def _cycle(self, l: int, b: jnp.ndarray) -> jnp.ndarray:
+        if l == self.nlevels - 1:
+            return self._coarse_inv @ b
+        # pre-smooth from zero initial guess
+        x = self._smooth(l, jnp.zeros_like(b), b, self.nu_pre)
+        r = b - self.ops[l].spmv(x)
+        xc = self._cycle(l + 1, self.transfers[l].restrict(r))
+        x = x + self.transfers[l].prolong(xc)
+        return self._smooth(l, x, b, self.nu_post)
+
+    def vcycle(self, b: jnp.ndarray) -> jnp.ndarray:
+        """One V(nu_pre, nu_post) cycle applied to ``b`` (zero initial
+        guess) — an SPD approximation of ``A^{-1} b``, usable as a CG
+        preconditioner."""
+        return self._cycle(0, jnp.asarray(b))

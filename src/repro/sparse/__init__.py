@@ -1,0 +1,16 @@
+"""Distributed sparse matrices over star forests (paper §6.4): split-phase
+SpMV, SpMM/PtAP, and stash-based parallel assembly."""
+
+from .csr import LocalCSR, csr_from_coo, csr_transpose, spgemm
+from .parmat import MatAssembler, ParCSR, Sparsity, assemble_coo
+
+__all__ = [
+    "LocalCSR",
+    "MatAssembler",
+    "ParCSR",
+    "Sparsity",
+    "assemble_coo",
+    "csr_from_coo",
+    "csr_transpose",
+    "spgemm",
+]

@@ -29,12 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import SFComm, StarForest, ragged_offsets
+from ..core import SFComm, StarForest, compose_inverse, ragged_offsets
 from ..kernels import ops as kops
 from ..meshdist.section import Section, apply_section
 from .csr import LocalCSR, csr_from_coo, csr_transpose, spgemm
 
-__all__ = ["ParCSR", "assemble_coo"]
+__all__ = ["ParCSR", "Sparsity", "MatAssembler", "assemble_coo"]
 
 
 def _owner_of(offsets: np.ndarray, ids: np.ndarray) -> np.ndarray:
@@ -175,6 +175,25 @@ class ParCSR:
     @property
     def shape(self) -> Tuple[int, int]:
         return int(self.row_offsets[-1]), int(self.col_offsets[-1])
+
+    def diagonal(self) -> np.ndarray:
+        """Main-diagonal entries (MatGetDiagonal) — purely local: entry
+        (i, i) always lives in the owner's diagonal block when row and
+        column distributions agree (square MPIAIJ layout)."""
+        m, n = self.shape
+        out = np.zeros(m, dtype=np.float64)
+        for r in range(self.nranks):
+            r0 = int(self.row_offsets[r]); c0 = int(self.col_offsets[r])
+            A = self.diag[r]
+            for i in range(A.shape[0]):
+                lc = r0 + i - c0
+                if not (0 <= lc < A.shape[1]):
+                    continue
+                s, e = int(A.indptr[i]), int(A.indptr[i + 1])
+                hit = np.flatnonzero(A.indices[s:e] == lc)
+                if hit.size:
+                    out[r0 + i] = float(A.data[s:e][hit].sum())
+        return out
 
     def toarray(self) -> np.ndarray:
         m, n = self.shape
@@ -395,12 +414,306 @@ def _csr_add(a: LocalCSR, b: LocalCSR) -> LocalCSR:
     return csr_from_coo(m, n, rows, cols, vals)
 
 
+def _value_bits(vals: np.ndarray) -> np.ndarray:
+    """Bit-pattern view of a float array, used as a tie-break sort key so
+    duplicate-entry sums run in a value-canonical (insert-order-free)
+    sequence."""
+    vals = np.ascontiguousarray(vals)
+    return vals.view({2: np.uint16, 4: np.uint32,
+                      8: np.uint64}[vals.dtype.itemsize])
+
+
+def _canonical_sum(keys: np.ndarray, vals: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Sum ``vals`` grouped by integer ``keys`` in a canonical order:
+    entries are sorted by (key, value bits) and summed left-to-right per
+    group (``np.add.reduceat``), so the result is bitwise independent of
+    the caller's insertion order — the sorted-segment reduction invariant
+    of ``core/redplan.py`` applied on the host."""
+    if keys.size == 0:
+        return keys.copy(), vals.copy()
+    order = np.lexsort((_value_bits(vals), keys))
+    ks, vs = keys[order], vals[order]
+    starts = np.concatenate([[0], np.flatnonzero(np.diff(ks)) + 1])
+    return ks[starts], np.add.reduceat(vs, starts)
+
+
+class Sparsity:
+    """Preallocated distributed sparsity pattern (MatPreallocator / pyop2
+    ``Sparsity``).
+
+    The global set of (row, col) positions is dedup'd once; each owner
+    rank stores its entries in canonical (local row, global col) order —
+    the *slot* numbering all inserts resolve against.  Row blocks are
+    contiguous in slot space, which is exactly what lets the stash flush
+    ride a Section-derived dof-SF (nnz-per-row sizes) in
+    :class:`MatAssembler`.
+    """
+
+    def __init__(self, nranks: int, m: int, n: int,
+                 rows: np.ndarray, cols: np.ndarray,
+                 row_offsets: Optional[np.ndarray] = None,
+                 col_offsets: Optional[np.ndarray] = None,
+                 dtype=np.float32):
+        self.nranks = int(nranks)
+        self.m, self.n = int(m), int(n)
+        if row_offsets is None:
+            row_offsets = np.linspace(0, m, nranks + 1).astype(np.int64)
+        self.row_offsets = np.asarray(row_offsets, dtype=np.int64)
+        self.col_offsets = col_offsets
+        self.dtype = np.dtype(dtype)
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        if rows.size and (rows.min() < 0 or rows.max() >= m):
+            raise ValueError("row index out of range")
+        if cols.size and (cols.min() < 0 or cols.max() >= n):
+            raise ValueError("col index out of range")
+        keys = np.unique(rows * n + cols)        # sorted (row, col) pairs
+        urows = keys // n
+        owner = _owner_of(self.row_offsets, urows)
+        # per-owner canonical slot arrays (key-sorted => row-major blocks)
+        self.keys: List[np.ndarray] = []
+        self.rows_of: List[np.ndarray] = []
+        self.cols_of: List[np.ndarray] = []
+        self.row_nnz: List[np.ndarray] = []
+        self.row_slot_start: List[np.ndarray] = []
+        for p in range(self.nranks):
+            k = keys[owner == p]
+            self.keys.append(k)
+            self.rows_of.append(k // n)
+            self.cols_of.append(k % n)
+            nrows = int(self.row_offsets[p + 1] - self.row_offsets[p])
+            lr = self.rows_of[p] - self.row_offsets[p]
+            cnt = np.bincount(lr, minlength=nrows).astype(np.int64) \
+                if nrows else np.zeros(0, np.int64)
+            self.row_nnz.append(cnt)
+            self.row_slot_start.append(ragged_offsets(cnt.tolist())[:-1])
+        self.nnz = np.asarray([k.size for k in self.keys], dtype=np.int64)
+        self.slot_offsets = ragged_offsets(self.nnz.tolist())
+
+    @property
+    def nnz_total(self) -> int:
+        return int(self.slot_offsets[-1])
+
+    def owner_of_rows(self, rows: np.ndarray) -> np.ndarray:
+        return _owner_of(self.row_offsets, np.asarray(rows, dtype=np.int64))
+
+    def lookup(self, rows: np.ndarray, cols: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """(owner rank, owner-local slot) of each (row, col); raises
+        ``KeyError`` for positions not preallocated."""
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        owner = self.owner_of_rows(rows)
+        key = rows * self.n + cols
+        slot = np.empty(rows.shape[0], dtype=np.int64)
+        for p in np.unique(owner):
+            sel = owner == p
+            idx = np.searchsorted(self.keys[p], key[sel])
+            idx = np.minimum(idx, max(self.keys[p].size - 1, 0))
+            ok = self.keys[p].size and \
+                (self.keys[p][idx] == key[sel]).all()
+            if not ok:
+                bad = np.flatnonzero(self.keys[p][idx] != key[sel]) \
+                    if self.keys[p].size else np.arange(sel.sum())
+                r0, c0 = rows[sel][bad[0]], cols[sel][bad[0]]
+                raise KeyError(f"entry ({int(r0)}, {int(c0)}) not in the "
+                               "preallocated sparsity")
+            slot[sel] = idx
+        return owner, slot
+
+    def to_parcsr(self, slot_values: np.ndarray,
+                  backend: Optional[str] = None) -> ParCSR:
+        """Materialize a ParCSR from the concatenated per-owner slot-value
+        array (length ``nnz_total``)."""
+        vals = np.asarray(slot_values)
+        rows = np.concatenate(self.rows_of) if self.nnz_total else \
+            np.zeros(0, np.int64)
+        cols = np.concatenate(self.cols_of) if self.nnz_total else \
+            np.zeros(0, np.int64)
+        return ParCSR.from_global_coo(
+            self.nranks, self.m, self.n, rows, cols,
+            vals.astype(np.float64), row_offsets=self.row_offsets,
+            col_offsets=self.col_offsets, dtype=self.dtype, backend=backend)
+
+
+class MatAssembler:
+    """Stash-based parallel assembly (PETSc MatStash / pyop2 ``Mat``).
+
+    ``add_values(rank, ...)`` resolves owned-row contributions to slots
+    immediately (pure local writes); off-process triplets accumulate in a
+    per-rank *stash*.  ``assemble()`` flushes every stash with **one** SF
+    reduce whose graph is built by :func:`repro.core.compose.compose_inverse`
+    over the row-ownership dof-SF — replacing the counting-SF + staging-SF
+    all-to-all of the legacy ``assemble_coo`` path:
+
+      row SF (roots = owned matrix rows, leaves = ranks' stashed rows)
+        --apply_section(nnz per row)-->  dof SF (roots = owner nnz slots)
+        --compose_inverse(dof SF, stash entry SF)-->  flush SF
+            (roots = owner slots, leaves = stash entries)
+
+    Duplicate inserts are pre-summed per rank in a value-canonical order
+    (:func:`_canonical_sum`), and the SF reduce itself runs in the
+    deterministic (leaf rank, edge index) order of ``core/redplan.py`` —
+    the assembled matrix is bitwise independent of insertion order.
+    """
+
+    def __init__(self, sparsity: Sparsity, backend: Optional[str] = None):
+        self.sparsity = sparsity
+        self.backend = backend
+        R = sparsity.nranks
+        self._local: List[List[Tuple[np.ndarray, np.ndarray]]] = \
+            [[] for _ in range(R)]
+        self._stash: List[List[Tuple[np.ndarray, np.ndarray, np.ndarray]]] = \
+            [[] for _ in range(R)]
+        self._flush_cache: Optional[Tuple[tuple, StarForest, List[int]]] = None
+        self.stats = {"local_inserts": 0, "stashed_inserts": 0, "flushes": 0}
+
+    def add_values(self, rank: int, rows: np.ndarray, cols: np.ndarray,
+                   vals: np.ndarray) -> None:
+        """Insert COO contributions from ``rank`` (ADD_VALUES semantics)."""
+        sp = self.sparsity
+        rows = np.asarray(rows, dtype=np.int64).reshape(-1)
+        cols = np.asarray(cols, dtype=np.int64).reshape(-1)
+        vals = np.asarray(vals, dtype=sp.dtype).reshape(-1)
+        if not (rows.size == cols.size == vals.size):
+            raise ValueError("rows/cols/vals length mismatch")
+        owner = sp.owner_of_rows(rows)
+        mine = owner == rank
+        if mine.any():
+            _, slot = sp.lookup(rows[mine], cols[mine])
+            self._local[rank].append((slot, vals[mine]))
+            self.stats["local_inserts"] += int(mine.sum())
+        rest = ~mine
+        if rest.any():
+            sp.lookup(rows[rest], cols[rest])   # fail fast on bad pattern
+            self._stash[rank].append((rows[rest], cols[rest], vals[rest]))
+            self.stats["stashed_inserts"] += int(rest.sum())
+
+    # ------------------------------------------------------------- flush
+    def _stash_partials(self) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+        """Per-rank (sorted distinct stash keys, canonical partial sums)."""
+        sp = self.sparsity
+        keys_q, vals_q = [], []
+        for q in range(sp.nranks):
+            if self._stash[q]:
+                r = np.concatenate([s[0] for s in self._stash[q]])
+                c = np.concatenate([s[1] for s in self._stash[q]])
+                v = np.concatenate([s[2] for s in self._stash[q]])
+                k, pv = _canonical_sum(r * sp.n + c, v)
+            else:
+                k = np.zeros(0, np.int64)
+                pv = np.zeros(0, sp.dtype)
+            keys_q.append(k)
+            vals_q.append(pv)
+        return keys_q, vals_q
+
+    def _flush_sf(self, keys_q: List[np.ndarray]) -> StarForest:
+        """The stash-flush SF, built by compose_inverse and cached on the
+        stash pattern (time-stepping re-assemblies reuse it)."""
+        sig = tuple(k.tobytes() for k in keys_q)
+        if self._flush_cache is not None and self._flush_cache[0] == sig:
+            return self._flush_cache[1]
+        sp = self.sparsity
+        R = sp.nranks
+        # row-ownership SF over each rank's distinct stashed rows
+        row_sf = StarForest(R)
+        urows_q = [np.unique(k // sp.n) for k in keys_q]
+        for q in range(R):
+            w = urows_q[q]
+            owner = sp.owner_of_rows(w)
+            remote = np.stack([owner, w - sp.row_offsets[owner]], axis=1) \
+                if w.size else np.zeros((0, 2), np.int64)
+            row_sf.set_graph(q, int(sp.row_offsets[q + 1]
+                                    - sp.row_offsets[q]),
+                             None, remote, nleafspace=max(w.size, 1))
+        row_sf.setup()
+        # nnz-per-row Section -> dof SF whose roots ARE the owner slots
+        sections = [Section(sp.row_nnz[p],
+                            np.concatenate([sp.row_slot_start[p],
+                                            [sp.nnz[p]]]))
+                    for p in range(R)]
+        dof_sf = apply_section(row_sf, sections)
+        # stash-entry SF: every stash entry is a root whose single leaf
+        # sits at its (row block, col position) in the dof-SF leaf space
+        owner_all = [sp.owner_of_rows(u) for u in urows_q]
+        B = StarForest(R)
+        for q in range(R):
+            k = keys_q[q]
+            if k.size:
+                rows = k // sp.n
+                cols = k % sp.n
+                own, slot = sp.lookup(rows, cols)
+                rowpos = np.searchsorted(urows_q[q], rows)
+                nnz_of = np.asarray(
+                    [sp.row_nnz[int(p)][int(r - sp.row_offsets[p])]
+                     for p, r in zip(owner_all[q], urows_q[q])],
+                    dtype=np.int64)
+                block_start = ragged_offsets(nnz_of.tolist())[:-1]
+                colpos = slot - np.asarray(
+                    [sp.row_slot_start[int(p)][int(r - sp.row_offsets[p])]
+                     for p, r in zip(own, rows)], dtype=np.int64)
+                local = block_start[rowpos] + colpos
+                remote = np.stack([np.full(k.size, q, np.int64),
+                                   np.arange(k.size, dtype=np.int64)],
+                                  axis=1)
+            else:
+                local = np.zeros(0, np.int64)
+                remote = np.zeros((0, 2), np.int64)
+            B.set_graph(q, int(k.size), local, remote,
+                        nleafspace=dof_sf.graph(q).nleafspace)
+        flush_sf = compose_inverse(dof_sf, B)
+        self._flush_cache = (sig, flush_sf, [int(k.size) for k in keys_q])
+        return flush_sf
+
+    def assemble(self, backend: Optional[str] = None) -> ParCSR:
+        """Drain all buffered inserts into a :class:`ParCSR`.
+
+        Local contributions are segment-summed into the owner slot arrays
+        on the host; the off-process stash moves with exactly ONE
+        ``SFComm.reduce`` over the compose_inverse flush SF.
+        """
+        sp = self.sparsity
+        R = sp.nranks
+        # 1) local canonical partials -> slot arrays
+        root = np.zeros(sp.nnz_total, dtype=sp.dtype)
+        for p in range(R):
+            if not self._local[p]:
+                continue
+            slots = np.concatenate([s for s, _ in self._local[p]])
+            vals = np.concatenate([v for _, v in self._local[p]])
+            us, sums = _canonical_sum(slots, vals)
+            root[sp.slot_offsets[p] + us] += sums
+        # 2) per-rank stash partials + 3) the ONE flush reduce
+        keys_q, vals_q = self._stash_partials()
+        flush_sf = self._flush_sf(keys_q)
+        lo = flush_sf.leaf_offsets()
+        leaf = np.zeros(max(flush_sf.nleafspace_total, 1), dtype=sp.dtype)
+        for q in range(R):
+            leaf[lo[q]: lo[q] + vals_q[q].size] = vals_q[q]
+        comm = SFComm(flush_sf, backend=backend or self.backend)
+        out = np.asarray(comm.reduce(
+            jnp.asarray(leaf[:flush_sf.nleafspace_total]),
+            jnp.asarray(root), "sum"))
+        self.stats["flushes"] += 1
+        # drain buffers; the sparsity and cached flush SF stay reusable
+        self._local = [[] for _ in range(R)]
+        self._stash = [[] for _ in range(R)]
+        return sp.to_parcsr(out, backend=backend or self.backend)
+
+
 def assemble_coo(nranks: int, m: int, n: int,
                  triplets: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
                  row_offsets: Optional[np.ndarray] = None,
                  col_offsets: Optional[np.ndarray] = None,
-                 dtype=np.float32) -> ParCSR:
+                 dtype=np.float32, method: str = "stash") -> ParCSR:
     """Distributed COO assembly via star forests (paper §6.4 step 3).
+
+    ``method="stash"`` (default): derive a :class:`Sparsity` from the
+    union pattern and flush through :class:`MatAssembler` — all
+    off-process values move in ONE compose_inverse-built SF reduce.
+
+    ``method="fetch"`` keeps the legacy 3-step path:
 
     1. A *counting SF* (one counter root per rank) + FetchAndOp(SUM) assigns
        every triplet a staging slot on its owner rank — the paper's
@@ -409,6 +722,22 @@ def assemble_coo(nranks: int, m: int, n: int,
        three REPLACE reduces.
     3. Owners build their local CSR from the staged COO.
     """
+    if method not in ("stash", "fetch"):
+        raise ValueError(f"unknown assembly method {method!r}")
+    if method == "stash":
+        rows_all = np.concatenate([np.asarray(t[0], dtype=np.int64)
+                                   for t in triplets]) \
+            if triplets else np.zeros(0, np.int64)
+        cols_all = np.concatenate([np.asarray(t[1], dtype=np.int64)
+                                   for t in triplets]) \
+            if triplets else np.zeros(0, np.int64)
+        sp = Sparsity(nranks, m, n, rows_all, cols_all,
+                      row_offsets=row_offsets, col_offsets=col_offsets,
+                      dtype=dtype)
+        asm = MatAssembler(sp)
+        for q, t in enumerate(triplets):
+            asm.add_values(q, t[0], t[1], t[2])
+        return asm.assemble()
     if row_offsets is None:
         row_offsets = np.linspace(0, m, nranks + 1).astype(np.int64)
     row_offsets = np.asarray(row_offsets, dtype=np.int64)

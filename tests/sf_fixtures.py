@@ -74,6 +74,48 @@ def strided_sf(dims=(2, 2, 2), grid=(4, 3, 3), start=1):
     return sf.setup()
 
 
+def bridge_sf(A, seed=5, nleaves=4):
+    """A second-hop SF whose roots live in ``A``'s leaf space — the B of
+    ``compose(A, B)`` (paper §2 composition)."""
+    from repro.core import StarForest
+    rng = np.random.default_rng(seed)
+    B = StarForest(A.nranks)
+    for q in range(A.nranks):
+        remote = []
+        for _ in range(nleaves):
+            m = int(rng.integers(0, A.nranks))
+            remote.append((m, int(rng.integers(0, A.graph(m).nleafspace))))
+        B.set_graph(q, A.graph(q).nleafspace, None, np.asarray(remote),
+                    nleafspace=nleaves)
+    return B.setup()
+
+
+def composed_sf(seed=2):
+    """compose(A, B): derived two-hop SF — roots are A's roots, leaves are
+    B's leaves, edges follow root -> A-leaf == B-root -> B-leaf chains
+    (A-holes drop their chains)."""
+    from repro.core import compose
+    A = random_star_forest(nranks=4, seed=seed)
+    return compose(A, bridge_sf(A, seed=seed + 100))
+
+
+def composed_inverse_sf(seed=6):
+    """compose_inverse(A, multi(A)): every edge of A becomes a degree-1
+    root of the multi-SF, so the inverse composition is always legal."""
+    from repro.core import compose_inverse, make_multi_sf
+    A = random_star_forest(nranks=4, seed=seed)
+    return compose_inverse(A, make_multi_sf(A))
+
+
+def embedded_leaf_sf(seed=4):
+    """embed_leaves keeps every other leaf slot WITHOUT remapping indices —
+    backends must handle the sparse leaf occupancy."""
+    from repro.core import embed_leaves
+    sf = random_star_forest(nranks=4, seed=seed)
+    sel = [np.arange(0, sf.graph(r).nleafspace, 2) for r in range(sf.nranks)]
+    return embed_leaves(sf, sel)
+
+
 FIXTURES = {
     "general0": lambda: general_sf(seed=0),
     "general1": lambda: general_sf(seed=1),
@@ -81,4 +123,7 @@ FIXTURES = {
     "permute": permute_sf,
     "local_only": local_only_sf,
     "strided": strided_sf,
+    "composed": composed_sf,
+    "composed_inverse": composed_inverse_sf,
+    "embedded": embedded_leaf_sf,
 }

@@ -1,10 +1,17 @@
-"""Composition / embedding / multi-SF semantics (paper §3.3)."""
+"""Composition / embedding / multi-SF semantics (paper §2 derived SFs)."""
 
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import random_star_forest
-from repro.core import (SFOps, StarForest, compose, compose_inverse,
+from sf_fixtures import bridge_sf
+from repro.core import (SFComm, SFOps, StarForest, compose, compose_inverse,
                         embed_leaves, embed_roots, identity_sf, make_multi_sf,
                         simulate)
 
@@ -84,6 +91,93 @@ def test_embed_leaves_filters_edges():
     e_all = {tuple(e) for e in sf.edges_global().tolist()}
     e_emb = {tuple(e) for e in esf.edges_global().tolist()}
     assert e_emb == {e for e in e_all if e[1] in keep}
+
+
+# ----------------------------------------------- cross-backend conformance
+# bcast over compose(A, B) must equal bcast over B after bcast over A, with
+# REAL backend data movement (not just the numpy oracle), for scalar and
+# tensor units alike — the §2 composition contract the overlap-growth and
+# assembly paths rely on.
+
+def _two_hop_case(seed):
+    A = random_star_forest(seed=seed)
+    B = bridge_sf(A, seed=seed + 50)
+    return A, B, compose(A, B)
+
+
+@pytest.mark.parametrize("backend", ["global", "pallas"])
+@pytest.mark.parametrize("unit", [(), (3,), (2, 2)])
+@pytest.mark.parametrize("seed", [3, 9])
+def test_compose_bcast_one_hop_equals_two_hop(backend, unit, seed):
+    A, B, AB = _two_hop_case(seed)
+    rng = np.random.default_rng(seed)
+    root = rng.standard_normal((A.nroots_total,) + unit).astype(np.float32)
+    kw = {"unit": unit} if unit else {}
+    cA = SFComm(A, backend=backend, **kw)
+    cB = SFComm(B, backend=backend, **kw)
+    cAB = SFComm(AB, backend=backend, **kw)
+    zA = jnp.zeros((A.nleafspace_total,) + unit, jnp.float32)
+    zB = jnp.zeros((B.nleafspace_total,) + unit, jnp.float32)
+    mid = cA.bcast(jnp.asarray(root), zA, "replace")
+    two_hop = np.asarray(cB.bcast(mid, zB, "replace"))
+    one_hop = np.asarray(cAB.bcast(jnp.asarray(root), zB, "replace"))
+    # compare on AB's connected leaves only: A-holes legitimately drop
+    # chains from AB, leaving those leaf slots at their initial value
+    gl = AB.edges_global()[:, 1]
+    np.testing.assert_array_equal(one_hop[gl], two_hop[gl])
+
+
+@pytest.mark.parametrize("backend", ["global", "pallas"])
+def test_compose_inverse_reduce_routes_to_roots(backend):
+    """reduce over compose_inverse(A, multi(A)) lands every multi-root
+    value on its A-root — the exact graph shape MatAssembler flushes on."""
+    A = random_star_forest(seed=21)
+    AB = compose_inverse(A, make_multi_sf(A))
+    rng = np.random.default_rng(21)
+    leaf = rng.standard_normal(AB.nleafspace_total).astype(np.float32)
+    got = np.asarray(SFComm(AB, backend=backend).reduce(
+        jnp.asarray(leaf), jnp.zeros(AB.nroots_total, jnp.float32), "sum"))
+    want = simulate.reduce_ref(AB, leaf,
+                               np.zeros(AB.nroots_total, np.float32), "sum")
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+_COMPOSE_SHARDMAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {tests!r})
+    import numpy as np, jax.numpy as jnp
+    from conftest import random_star_forest
+    from sf_fixtures import bridge_sf
+    from repro.core import SFComm, compose
+    for seed, unit in ((3, ()), (9, (3,))):
+        A = random_star_forest(seed=seed)
+        B = bridge_sf(A, seed=seed + 50)
+        AB = compose(A, B)
+        rng = np.random.default_rng(seed)
+        root = rng.standard_normal((A.nroots_total,) + unit).astype(np.float32)
+        kw = {{"unit": unit}} if unit else {{}}
+        mid = SFComm(A, backend="shardmap", **kw).bcast(
+            root, np.zeros((A.nleafspace_total,) + unit, np.float32))
+        two = np.asarray(SFComm(B, backend="shardmap", **kw).bcast(
+            mid, np.zeros((B.nleafspace_total,) + unit, np.float32)))
+        one = np.asarray(SFComm(AB, backend="shardmap", **kw).bcast(
+            root, np.zeros((B.nleafspace_total,) + unit, np.float32)))
+        gl = AB.edges_global()[:, 1]
+        np.testing.assert_array_equal(one[gl], two[gl])
+    print("COMPOSE-SHARDMAP-OK")
+""").format(src=os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                             "src")),
+            tests=os.path.abspath(os.path.dirname(__file__)))
+
+
+@pytest.mark.slow
+def test_compose_two_hop_shardmap_subprocess():
+    r = subprocess.run([sys.executable, "-c", _COMPOSE_SHARDMAP_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "COMPOSE-SHARDMAP-OK" in r.stdout
 
 
 def test_multi_sf_layout_matches_oracle():

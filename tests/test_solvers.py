@@ -1,10 +1,13 @@
-"""CG / CGAsync on the SF SpMV (paper §6.2)."""
+"""CG / CGAsync on the SF SpMV (paper §6.2) and the geometric-multigrid
+preconditioner built from §2-composed SF transfers."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.meshdist.dmda import DMDA
 from repro.solvers.cg import cg, cg_async
+from repro.solvers.multigrid import Multigrid, Transfer, build_hierarchy
 from repro.sparse.parmat import ParCSR
 
 
@@ -49,3 +52,103 @@ def test_cg_async_check_every_k(spd, rng):
     r = cg_async(spd.spmv, b, tol=1e-6, maxiter=300, check_every=10)
     assert r.converged
     assert r.iters % 10 == 0 or r.iters == 300
+
+
+# ------------------------------------------------------ geometric multigrid
+def _da(shape, nranks):
+    # vertex-centered refinement/coarsening is defined for non-periodic
+    # grids only (dmda.coarsen/refine)
+    return DMDA(shape, nranks, periodic=False)
+
+
+def _natural_rhs(da, seed=0):
+    """A rank-layout-independent RHS: drawn in natural (lexicographic)
+    ordering, permuted into ``da``'s global ownership ordering."""
+    rng = np.random.default_rng(seed)
+    bnat = rng.standard_normal(da.nglobal).astype(np.float32)
+    nat = DMDA.box_coords([(0, e) for e in da.shape])
+    b = np.empty(da.nglobal, np.float32)
+    b[da.natural_to_global(nat)] = bnat
+    return jnp.asarray(b)
+
+
+def test_dmda_refine_coarsen_roundtrip():
+    da = _da((9, 5), 4)
+    assert da.refine().shape == (17, 9)
+    assert da.coarsen().shape == (5, 3)
+    assert da.refine().coarsen().shape == da.shape
+    assert [d.shape for d in build_hierarchy(_da((17, 17), 4), 3)] == \
+        [(17, 17), (9, 9), (5, 5)]
+
+
+def test_transfer_matches_interpolation_matrix():
+    """prolong/restrict through the SF are exactly P x and P^T x for the
+    tensor-product linear interpolation matrix P."""
+    fine, coarse = _da((9, 9), 4), _da((5, 5), 4)
+    t = Transfer(fine, coarse)
+    P = t.as_parcsr().toarray()
+    rng = np.random.default_rng(1)
+    xc = rng.standard_normal(coarse.nglobal).astype(np.float32)
+    xf = rng.standard_normal(fine.nglobal).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(t.prolong(jnp.asarray(xc))),
+                               P @ xc, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(t.restrict(jnp.asarray(xf))),
+                               P.T @ xf, rtol=1e-4, atol=1e-4)
+    # injection: coarse values land exactly on coincident fine points
+    inj = np.asarray(t.inject(jnp.asarray(xc)))
+    w1 = P == 1.0
+    assert w1.sum() == coarse.nglobal       # one coincident fine point each
+    np.testing.assert_allclose(inj, (P * w1) @ xc, rtol=1e-6, atol=0)
+
+
+def test_galerkin_coarse_operator_is_ptap():
+    da = _da((9, 9), 4)
+    mg = Multigrid(da, nlevels=2)
+    P = mg.transfers[0].as_parcsr().toarray()
+    A = mg.ops[0].toarray()
+    np.testing.assert_allclose(mg.ops[1].toarray(), P.T @ A @ P,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vcycle_single_level_is_direct_solve():
+    """nlevels=1 degenerates to the dense coarse solve: vcycle(b) must be
+    A^+ b to float32 machine precision."""
+    da = _da((5, 5), 2)
+    mg = Multigrid(da, nlevels=1)
+    b = _natural_rhs(da, seed=3)
+    want = np.linalg.pinv(mg.ops[0].toarray()).astype(np.float32) @ \
+        np.asarray(b)
+    np.testing.assert_allclose(np.asarray(mg.vcycle(b)), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mg_pcg_golden_iteration_count():
+    """The headline §2-composition result: V(1,1)-preconditioned CG on the
+    17x17 Poisson problem converges in 8 iterations (golden, +-1) — less
+    than half of plain CG — and the count does not depend on how many
+    ranks the DMDA (and with it every transfer SF and Galerkin PtAP) is
+    distributed over."""
+    iters = {}
+    for nranks in (1, 2, 4):
+        da = _da((17, 17), nranks)
+        mg = Multigrid(da, nlevels=3)
+        b = _natural_rhs(da, seed=0)
+        plain = cg(mg.ops[0].spmv, b, tol=1e-6, maxiter=200)
+        pre = cg(mg.ops[0].spmv, b, tol=1e-6, maxiter=200, M=mg.vcycle)
+        assert plain.converged and pre.converged
+        assert 2 * pre.iters <= plain.iters, \
+            f"nranks={nranks}: {pre.iters} vs {plain.iters}"
+        iters[nranks] = pre.iters
+    assert len(set(iters.values())) == 1, f"rank-dependent iters: {iters}"
+    assert abs(iters[1] - 8) <= 1, f"golden count drifted: {iters}"
+
+
+def test_mg_preconditioned_cg_async_converges():
+    """The V-cycle traces into the fused while_loop of cg_async."""
+    da = _da((9, 9), 2)
+    mg = Multigrid(da, nlevels=2)
+    b = _natural_rhs(da, seed=5)
+    res = cg_async(mg.ops[0].spmv, b, tol=1e-6, maxiter=100, M=mg.vcycle)
+    assert res.converged
+    np.testing.assert_allclose(mg.ops[0].toarray() @ np.asarray(res.x),
+                               np.asarray(b), atol=1e-3)
