@@ -35,3 +35,41 @@ def write_artifact(path: str, report: dict) -> None:
     report["meta"] = stamp()
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
+
+
+def sflog_guard_run(scenario_fn):
+    """Run a guard scenario with SF event logging on; returns ``(result,
+    {"exchanges", "bytes"})`` — the exchange activity of ONE post-warmup
+    run.  The scenario executes once first with logging off so compile and
+    autotune work stay outside the measured window: the counted exchanges
+    are the deterministic steady-state dispatches, which is what
+    ``perf_guard``'s >10% exchange-growth gate diffs against the committed
+    ``sflog_guard`` baseline."""
+    from repro.core import sflog
+
+    result = scenario_fn()
+    old = sflog.set_mode("on")
+    before = sflog.events_snapshot()
+    try:
+        scenario_fn()
+    finally:
+        sflog.set_mode(old)
+    return result, sflog.exchange_totals(sflog.events_delta(before))
+
+
+def stamp_sflog(path: str, summary: dict) -> None:
+    """Merge a run's sflog summary into an existing artifact, so bench
+    artifacts carry exchange/byte provenance alongside timings.  A missing
+    or unreadable artifact is a no-op; an artifact that already recorded
+    its own ``sflog`` block (bench_async's subprocess dump) is left
+    alone."""
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, ValueError):
+        return
+    if "sflog" in obj:
+        return
+    obj["sflog"] = summary
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=True)

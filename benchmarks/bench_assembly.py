@@ -133,15 +133,18 @@ def run_guard_scenario(reps=5):
 
 
 def run():
-    from benchmarks.artifacts import artifact_path, write_artifact
+    from benchmarks.artifacts import (artifact_path, sflog_guard_run,
+                                      write_artifact)
     from repro.kernels.tuning import resolve_interpret
 
     assembly = _assembly_section()
     overlap = _overlap_section()
+    guard_val, guard_comm = sflog_guard_run(run_guard_scenario)
     report = {
         "assembly": assembly,
         "overlap": overlap,
-        "guard": {GUARD_NAME: run_guard_scenario()},
+        "guard": {GUARD_NAME: guard_val},
+        "sflog_guard": {GUARD_NAME: guard_comm},
         "interpret": resolve_interpret(),
         "nranks": GUARD_RANKS,
     }

@@ -13,11 +13,16 @@ figure-of-merit per size is
     overlap_efficiency = t_sync / t_split
 
 i.e. how much the split-phase formulation buys over blocking barriers at
-that message size (>1 means overlap is winning).  On emulated host devices
-there is no independent progress engine, so efficiencies hover at or below
-1.0 — the artifact records the *shape* of the curve so real-accelerator
-runs have a comparison point.  The sweep lands in ``BENCH_async.json``
-alongside the usual CSV rows.
+that message size (>1 means overlap is winning).  Both timings are recorded
+as fenced :mod:`repro.core.sflog` events (``REPRO_SF_LOG=fence`` semantics:
+``block_until_ready`` inside the event window) and the ratio is computed by
+:func:`repro.core.sflog.overlap_efficiency` from the registry aggregates —
+the same event stream ``log_view`` prints, not a separate hand-rolled
+timer.  On emulated host devices there is no independent progress engine,
+so efficiencies hover at or below 1.0 — the artifact records the *shape* of
+the curve so real-accelerator runs have a comparison point.  The sweep
+lands in ``BENCH_async.json`` alongside the usual CSV rows, together with
+the subprocess's ``sflog.dump_json()`` event summary.
 """
 
 import os
@@ -34,8 +39,10 @@ SCRIPT = textwrap.dedent("""
     import sys; sys.path.insert(0, {src!r})
     import time
     import numpy as np, jax, jax.numpy as jnp
-    from repro.core import DistSF, StarForest
+    from repro.core import DistSF, StarForest, sflog
     from repro.core.distributed import _smap
+
+    sflog.set_mode("fence")   # wall time means completion, not dispatch
 
     R = 8
 
@@ -71,16 +78,17 @@ SCRIPT = textwrap.dedent("""
                 jax.sharding.PartitionSpec("sf"))(roots, leaves, w)
         return jax.jit(step), d
 
-    def time_fn(fn, args, iters=20, reps=3):
+    def measure(fn, args, ev, iters=60):
+        # compile + warm outside the event window, then record every call
+        # as one fenced sflog event occurrence; the registry's mean per
+        # call is the timing (overlap_efficiency reads the same aggregate)
         out = fn(*args); jax.block_until_ready(out)
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                out = fn(*args)
-            jax.block_until_ready(out)
-            best = min(best, (time.perf_counter() - t0) / iters * 1e6)
-        return best
+        for _ in range(iters):
+            t0 = sflog.op_begin()
+            out = fn(*args)
+            sflog.op_end(ev, t0, out)
+        rec = sflog.event(ev)
+        return rec.time / rec.count * 1e6
 
     for n in {sizes!r}:
         sf = make_sf(n)
@@ -95,10 +103,14 @@ SCRIPT = textwrap.dedent("""
         res = {{}}
         for name, sync in [("split", False), ("sync", True)]:
             fn, _ = build(sf, sync)
-            res[name] = time_fn(fn, (roots, leaves, w))
-        eff = res["sync"] / res["split"]
+            res[name] = measure(fn, (roots, leaves, w),
+                                f"AsyncHalo{{n}}" + name.capitalize())
+        eff = sflog.overlap_efficiency(f"AsyncHalo{{n}}Sync",
+                                       f"AsyncHalo{{n}}Split")
         print(f"CSV,halo_n{{n}}_split,{{res['split']:.1f}},"
               f"sync_us={{res['sync']:.1f}};overlap_eff={{eff:.2f}}")
+    import json
+    print("SFLOG," + json.dumps(sflog.dump_json()))
 """).format(src=os.path.abspath(os.path.join(os.path.dirname(__file__),
                                              "..", "src")),
             sizes=SIZES)
@@ -109,8 +121,12 @@ def run():
 
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=600)
-    rows, sweep = [], {}
+    rows, sweep, sflog_dump = [], {}, None
     for line in r.stdout.splitlines():
+        if line.startswith("SFLOG,"):
+            import json
+            sflog_dump = json.loads(line.split(",", 1)[1])
+            continue
         if not line.startswith("CSV,"):
             continue
         _, name, us, der = line.split(",", 3)
@@ -126,6 +142,8 @@ def run():
     if not rows:
         rows.append(("halo_overlap_FAILED", 0.0, r.stderr[-200:]))
         return rows
-    write_artifact(artifact_path("BENCH_async.json"),
-                   {"ranks": 8, "halo_sweep": sweep})
+    out = {"ranks": 8, "halo_sweep": sweep}
+    if sflog_dump is not None:
+        out["sflog"] = sflog_dump
+    write_artifact(artifact_path("BENCH_async.json"), out)
     return rows

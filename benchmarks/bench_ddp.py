@@ -159,14 +159,17 @@ def run_guard_scenario(iters=8, reps=7):
 
 
 def run():
-    from benchmarks.artifacts import artifact_path, write_artifact
+    from benchmarks.artifacts import (artifact_path, sflog_guard_run,
+                                      write_artifact)
 
     reduce_sec = _reduce_section()
     replan = _replan_section()
+    guard_val, guard_comm = sflog_guard_run(run_guard_scenario)
     report = {
         "reduce": reduce_sec,
         "replan": replan,
-        "guard": {GUARD_NAME: run_guard_scenario()},
+        "guard": {GUARD_NAME: guard_val},
+        "sflog_guard": {GUARD_NAME: guard_comm},
         "grains": GRAINS,
         "world": GUARD_WORLD,
     }

@@ -164,17 +164,20 @@ def run_guard_scenario(iters=30):
 
 
 def run():
-    from benchmarks.artifacts import artifact_path, write_artifact
+    from benchmarks.artifacts import (artifact_path, sflog_guard_run,
+                                      write_artifact)
     from repro.kernels.tuning import resolve_interpret
 
     dispatch = _dispatch_section()
     plan_cache = _plan_cache_section()
     serving = _serving_section()
+    guard_val, guard_comm = sflog_guard_run(run_guard_scenario)
     report = {
         "dispatch": dispatch,
         "plan_cache": plan_cache,
         "serving": serving,
-        "guard": {GUARD_NAME: run_guard_scenario()},
+        "guard": {GUARD_NAME: guard_val},
+        "sflog_guard": {GUARD_NAME: guard_comm},
         "interpret": resolve_interpret(),
     }
     write_artifact(artifact_path("BENCH_serving.json"), report)

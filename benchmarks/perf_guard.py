@@ -19,6 +19,13 @@ artifacts:
   flush-SF cache warm) and fails when us/call regresses more than
   ``THRESHOLD``× vs the committed ``BENCH_assembly.json`` baseline.
 
+The serving/ddp/assembly gates additionally check **exchange-count
+growth**: each scenario re-runs with :mod:`repro.core.sflog` enabled and
+fails when it now issues >10% more SF exchanges than the committed
+``sflog_guard`` baseline — comm-structure regressions (a lost fusion, a
+doubled halo) are deterministic counts, visible even where emulated-device
+timings are too noisy to move the 2x timing gate.
+
 Each gate skips gracefully (with a reason) when there is nothing sound to
 compare against: no committed artifact, an artifact without the
 environment stamp, a stamp from another platform/jax/device-count (timings
@@ -37,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 THRESHOLD = 2.0
+EXCHANGE_GROWTH = 1.10
 BASELINE_ROW = "pack_kernel_128x128"
 
 
@@ -104,8 +112,28 @@ def guard_pack() -> int:
     return 0
 
 
+def _check_exchange_growth(obj: dict, guard_name: str, fresh: dict) -> int:
+    """>10% SF-exchange-count growth vs the committed ``sflog_guard``
+    block fails; missing baseline skips."""
+    base = obj.get("sflog_guard", {}).get(guard_name)
+    if not base or not float(base.get("exchanges", 0)):
+        return _skip(f"{guard_name}: no sflog_guard exchange baseline")
+    growth = fresh["exchanges"] / float(base["exchanges"])
+    line = (f"perf-guard: {guard_name} exchanges "
+            f"fresh={fresh['exchanges']:.0f} "
+            f"baseline={float(base['exchanges']):.0f} "
+            f"growth={growth:.2f}x (threshold {EXCHANGE_GROWTH:.2f}x)")
+    if growth > EXCHANGE_GROWTH:
+        print(line + "  FAIL")
+        return 1
+    print(line + "  OK")
+    return 0
+
+
 def guard_serving() -> int:
-    """Tokens/sec gate on the fixed SF-dispatch decode scenario."""
+    """Tokens/sec + exchange-count gate on the fixed SF-dispatch decode
+    scenario."""
+    from benchmarks.artifacts import sflog_guard_run
     from benchmarks.bench_serving import GUARD_NAME, run_guard_scenario
 
     obj, reason = _load_baseline("BENCH_serving.json")
@@ -115,62 +143,60 @@ def guard_serving() -> int:
     if not base:
         return _skip(f"baseline has no {GUARD_NAME!r} guard scenario")
 
-    fresh = run_guard_scenario()
+    fresh, fresh_comm = sflog_guard_run(run_guard_scenario)
     ratio = float(base) / fresh        # >1 means we got SLOWER
     line = (f"perf-guard: {GUARD_NAME} fresh={fresh:.0f}tok/s "
             f"baseline={float(base):.0f}tok/s slowdown={ratio:.2f}x "
             f"(threshold {THRESHOLD}x)")
+    rc = 0
     if ratio > THRESHOLD:
         print(line + "  FAIL")
-        return 1
-    print(line + "  OK")
-    return 0
+        rc = 1
+    else:
+        print(line + "  OK")
+    return max(rc, _check_exchange_growth(obj, GUARD_NAME, fresh_comm))
+
+
+def _guard_us_and_exchanges(artifact: str, guard_name: str,
+                            scenario) -> int:
+    """us/call timing gate + exchange-count gate for one guarded bench."""
+    from benchmarks.artifacts import sflog_guard_run
+
+    obj, reason = _load_baseline(artifact)
+    if obj is None:
+        return _skip(reason)
+    base = obj.get("guard", {}).get(guard_name)
+    if not base:
+        return _skip(f"baseline has no {guard_name!r} guard scenario")
+
+    fresh, fresh_comm = sflog_guard_run(scenario)
+    ratio = fresh / float(base)        # >1 means we got SLOWER
+    line = (f"perf-guard: {guard_name} fresh={fresh:.0f}us "
+            f"baseline={float(base):.0f}us slowdown={ratio:.2f}x "
+            f"(threshold {THRESHOLD}x)")
+    rc = 0
+    if ratio > THRESHOLD:
+        print(line + "  FAIL")
+        rc = 1
+    else:
+        print(line + "  OK")
+    return max(rc, _check_exchange_growth(obj, guard_name, fresh_comm))
 
 
 def guard_ddp() -> int:
-    """us/call gate on the fixed bucketed-gradient-reduce scenario."""
+    """us/call + exchange gate on the fixed bucketed-gradient-reduce
+    scenario."""
     from benchmarks.bench_ddp import GUARD_NAME, run_guard_scenario
-
-    obj, reason = _load_baseline("BENCH_ddp.json")
-    if obj is None:
-        return _skip(reason)
-    base = obj.get("guard", {}).get(GUARD_NAME)
-    if not base:
-        return _skip(f"baseline has no {GUARD_NAME!r} guard scenario")
-
-    fresh = run_guard_scenario()
-    ratio = fresh / float(base)        # >1 means we got SLOWER
-    line = (f"perf-guard: {GUARD_NAME} fresh={fresh:.0f}us "
-            f"baseline={float(base):.0f}us slowdown={ratio:.2f}x "
-            f"(threshold {THRESHOLD}x)")
-    if ratio > THRESHOLD:
-        print(line + "  FAIL")
-        return 1
-    print(line + "  OK")
-    return 0
+    return _guard_us_and_exchanges("BENCH_ddp.json", GUARD_NAME,
+                                   run_guard_scenario)
 
 
 def guard_assembly() -> int:
-    """us/call gate on the fixed warm stash re-assembly scenario."""
+    """us/call + exchange gate on the fixed warm stash re-assembly
+    scenario."""
     from benchmarks.bench_assembly import GUARD_NAME, run_guard_scenario
-
-    obj, reason = _load_baseline("BENCH_assembly.json")
-    if obj is None:
-        return _skip(reason)
-    base = obj.get("guard", {}).get(GUARD_NAME)
-    if not base:
-        return _skip(f"baseline has no {GUARD_NAME!r} guard scenario")
-
-    fresh = run_guard_scenario()
-    ratio = fresh / float(base)        # >1 means we got SLOWER
-    line = (f"perf-guard: {GUARD_NAME} fresh={fresh:.0f}us "
-            f"baseline={float(base):.0f}us slowdown={ratio:.2f}x "
-            f"(threshold {THRESHOLD}x)")
-    if ratio > THRESHOLD:
-        print(line + "  FAIL")
-        return 1
-    print(line + "  OK")
-    return 0
+    return _guard_us_and_exchanges("BENCH_assembly.json", GUARD_NAME,
+                                   run_guard_scenario)
 
 
 def main() -> int:

@@ -7,10 +7,37 @@ Prints ``name,us_per_call,derived`` CSV.  Table/figure map:
   §2 DMDA halo / unit sweep -> bench_halo
 Roofline tables are produced by ``python -m repro.launch.roofline`` from the
 dry-run reports.
+
+Every suite that writes a ``BENCH_*.json`` artifact gets it stamped with
+the run's :func:`repro.core.sflog.dump_json` summary (the events/counters
+the suite generated in this process), so artifacts carry exchange/byte
+provenance, not just timings.
 """
 
 import argparse
 import sys
+
+# suite -> the artifact its run() writes (stamped with sflog provenance)
+ARTIFACTS = {
+    "pingpong": "BENCH_pingpong.json",
+    "async": "BENCH_async.json",
+    "kernels": "BENCH_kernels.json",
+    "halo": "BENCH_halo.json",
+    "serving": "BENCH_serving.json",
+    "ddp": "BENCH_ddp.json",
+    "assembly": "BENCH_assembly.json",
+}
+
+
+def _sflog_summary(before):
+    """The suite-window slice of the registry: per-event count/bytes growth,
+    exchange totals, and the full counter table."""
+    from repro.core import sflog
+    delta = sflog.events_delta(before)
+    return {"mode": sflog.mode(),
+            "events_delta": delta,
+            "exchange_totals": sflog.exchange_totals(delta),
+            "counters": sflog.counters()}
 
 
 def main() -> None:
@@ -35,13 +62,20 @@ def main() -> None:
         "ddp": bench_ddp.run,
         "assembly": bench_assembly.run,
     }
+    from benchmarks.artifacts import artifact_path, stamp_sflog
+    from repro.core import sflog
+
     wanted = list(suites) if args.only == "all" else args.only.split(",")
     print("name,us_per_call,derived")
     ok = True
     for name in wanted:
         try:
+            before = sflog.events_snapshot()
             for row in suites[name]():
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            if name in ARTIFACTS:
+                stamp_sflog(artifact_path(ARTIFACTS[name]),
+                            _sflog_summary(before))
         except Exception as e:  # noqa: BLE001
             ok = False
             print(f"{name}_FAILED,0,{type(e).__name__}: {e}",

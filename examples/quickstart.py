@@ -3,13 +3,20 @@
 Builds the paper's Fig 2 star forest, runs every communication operation,
 derives the multi-SF, composes SFs, and shows the pattern analysis that
 drives collective selection.  Run:  PYTHONPATH=src python examples/quickstart.py
+
+With ``REPRO_SF_LOG=1`` (or ``fence``) it also prints the ``-log_view``
+analogue — every exchange above lands in the :mod:`repro.core.sflog` event
+registry — plus the ``SFView`` structural dump, and writes the JSON dump to
+``SFLOG_quickstart.json`` (the CI log-view smoke step asserts on both).
 """
+
+import json
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (SFComm, StarForest, available_backends, compose,
-                        identity_sf, make_multi_sf, patterns)
+                        identity_sf, make_multi_sf, patterns, sflog)
 
 # --- the Fig 2 graph: 3 ranks, leaves point at local or remote roots -------
 sf = StarForest(3)
@@ -80,3 +87,13 @@ print("\npattern:", rep.kind,
       "| remote edges:", rep.n_remote_edges,
       "| send-side pack elidable fraction:",
       f"{rep.pack_elidable_fraction:.2f}")
+
+# --- observability: log_view + SFView (REPRO_SF_LOG=1) ----------------------
+if sflog.enabled():
+    print()
+    print(sflog.format_sf_view(ops))
+    print()
+    print(sflog.log_view())
+    with open("SFLOG_quickstart.json", "w") as f:
+        json.dump(sflog.dump_json(), f, indent=2, sort_keys=True)
+    print("\nwrote SFLOG_quickstart.json")

@@ -17,6 +17,8 @@ Public API:
                              transfers / stash assembly build on these)
   patterns.analyze           §5.2 pattern discovery / collective selection
   redplan                    shared sort-segment reduction machinery (§3.3)
+  sflog                      -log_view analogue: event/counter registry,
+                             comm-volume accounting, SFView introspection
 """
 
 from .graph import RankGraph, StarForest, ragged_offsets
@@ -33,7 +35,7 @@ from .dynplan import DynPlan, PlanCache, star_forest_from_assignment
 from .backend import (GlobalBackend, PallasBackend, SFBackend, SFComm,
                       ShardmapBackend, available_backends, make_backend,
                       register_backend, select_backend)
-from . import patterns, redplan, simulate
+from . import patterns, redplan, sflog, simulate
 
 __all__ = [
     "RankGraph", "StarForest", "ragged_offsets",
@@ -50,5 +52,5 @@ __all__ = [
     "SFBackend", "SFComm", "GlobalBackend", "ShardmapBackend",
     "PallasBackend", "available_backends", "make_backend",
     "register_backend", "select_backend",
-    "patterns", "redplan", "simulate",
+    "patterns", "redplan", "sflog", "simulate",
 ]

@@ -35,6 +35,7 @@ conformance suite in ``tests/test_backends.py`` enforces this.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional, Protocol, Tuple, \
     runtime_checkable
 
@@ -49,6 +50,7 @@ from .plan import GlobalPlan, build_global_plan
 from .unit import check_plan_unit, resolve_unit
 from .distributed import DistSF
 from . import patterns as pat
+from . import sflog
 from . import priors as priors_mod
 from ..kernels import ops as kops
 from ..kernels.tuning import resolve_interpret
@@ -395,9 +397,15 @@ class _DeferredComm:
     op: Any
 
     def end(self, data):
+        info = sflog.claim_pending(self)
+        t0 = time.perf_counter() if info is not None else 0.0
         if self.kind == "bcast":
-            return self.owner.bcast(self.data, data, self.op)
-        return self.owner.reduce(self.data, data, self.op)
+            out = self.owner.bcast(self.data, data, self.op)
+        else:
+            out = self.owner.reduce(self.data, data, self.op)
+        if info is not None:
+            sflog.pending_end(info, t0, out)
+        return out
 
 
 class ShardmapBackend:
@@ -557,6 +565,15 @@ class SFComm:
     section "Bucketed gradient exchange & elastic training" for the bucket
     diagram and how to choose a byte budget.
 
+    Every operation on this facade reports into the process-wide event
+    registry of :mod:`repro.core.sflog` — the ``-log_view`` analogue: counts,
+    wall time, comm volume in bytes, and split-phase overlap windows per
+    event, plus ``sflog.sf_view(comm)`` for the ``PetscSFView`` structural
+    dump.  Enable with ``REPRO_SF_LOG=1`` (or ``fence`` for fenced wall
+    times); the README section "Observability: log_view and SFView" shows a
+    sample table.  Hooks fire at dispatch time only, so jitted paths keep
+    their no-retrace guarantees (``traced`` vs ``count`` in the table).
+
     When the SF topology is *runtime data* rather than setup-time metadata —
     MoE expert routing, where the router's top-k picks define the edge list
     every step — use :class:`repro.core.dynplan.DynPlan` instead: same
@@ -575,6 +592,7 @@ class SFComm:
         self.backend = make_backend(name, sf, mesh=mesh, unit=unit,
                                     **backend_kwargs)
         self._bundles: Dict[Any, Any] = {}
+        self._lmeta: Optional[Dict[str, Any]] = None   # sflog tag cache
 
     @property
     def backend_name(self) -> str:
@@ -585,27 +603,113 @@ class SFComm:
         """The backend plan's payload unit spec."""
         return self.backend.unit
 
+    # sflog plumbing ------------------------------------------------------
+    def _logtags(self, op=None) -> Dict[str, Any]:
+        """Static tags every event from this comm carries: backend name,
+        pattern kind, cached-plan signature (computed once per comm)."""
+        m = self._lmeta
+        if m is None:
+            plan = getattr(self.backend, "plan", None)
+            if plan is None:
+                plan = getattr(getattr(self.backend, "dist", None),
+                               "plan", None)
+            m = self._lmeta = {
+                "backend": self.backend_name,
+                "pattern": getattr(getattr(plan, "pattern", None),
+                                   "kind", None),
+                "sig": repr(plan.comm_signature())
+                if hasattr(plan, "comm_signature") else None,
+            }
+        if op is None:
+            return m
+        t = dict(m)
+        t["op"] = get_op(op).name
+        return t
+
+    def _payload_bytes(self, data) -> float:
+        """Comm volume of one exchange: plan edges x unit row bytes of the
+        actual payload (trailing dims x itemsize); works on tracers."""
+        shape = getattr(data, "shape", None)
+        if shape is None:
+            data = np.asarray(data)
+            shape = data.shape
+        row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+        itemsize = np.dtype(getattr(data, "dtype", np.float32)).itemsize
+        return float(self.sf.nedges_total) * row * itemsize
+
     # delegation ----------------------------------------------------------
     def bcast_begin(self, rootdata, op="replace"):
-        return self.backend.bcast_begin(rootdata, op)
+        if not sflog.enabled():
+            return self.backend.bcast_begin(rootdata, op)
+        t0 = sflog.op_begin()
+        pend = self.backend.bcast_begin(rootdata, op)
+        nb = self._payload_bytes(rootdata)
+        tags = self._logtags(op)
+        sflog.op_end("SFBcastBegin", t0, getattr(pend, "payload", None),
+                     nbytes=nb, tags=tags)
+        sflog.stash_pending(pend, "SFBcastEnd", nb, tags, tracing=t0 < 0)
+        return pend
 
     def bcast_end(self, pending, leafdata):
-        return self.backend.bcast_end(pending, leafdata)
+        info = sflog.claim_pending(pending)
+        if info is None:
+            return self.backend.bcast_end(pending, leafdata)
+        t0 = time.perf_counter()
+        out = self.backend.bcast_end(pending, leafdata)
+        sflog.pending_end(info, t0, out)
+        return out
 
     def bcast(self, rootdata, leafdata, op="replace"):
-        return self.backend.bcast(rootdata, leafdata, op)
+        if not sflog.enabled():
+            return self.backend.bcast(rootdata, leafdata, op)
+        t0 = sflog.op_begin()
+        out = self.backend.bcast(rootdata, leafdata, op)
+        sflog.op_end("SFBcast", t0, out,
+                     nbytes=self._payload_bytes(rootdata),
+                     tags=self._logtags(op))
+        return out
 
     def reduce_begin(self, leafdata, op="sum"):
-        return self.backend.reduce_begin(leafdata, op)
+        if not sflog.enabled():
+            return self.backend.reduce_begin(leafdata, op)
+        t0 = sflog.op_begin()
+        pend = self.backend.reduce_begin(leafdata, op)
+        nb = self._payload_bytes(leafdata)
+        tags = self._logtags(op)
+        sflog.op_end("SFReduceBegin", t0, getattr(pend, "payload", None),
+                     nbytes=nb, tags=tags)
+        sflog.stash_pending(pend, "SFReduceEnd", nb, tags, tracing=t0 < 0)
+        return pend
 
     def reduce_end(self, pending, rootdata):
-        return self.backend.reduce_end(pending, rootdata)
+        info = sflog.claim_pending(pending)
+        if info is None:
+            return self.backend.reduce_end(pending, rootdata)
+        t0 = time.perf_counter()
+        out = self.backend.reduce_end(pending, rootdata)
+        sflog.pending_end(info, t0, out)
+        return out
 
     def reduce(self, leafdata, rootdata, op="sum"):
-        return self.backend.reduce(leafdata, rootdata, op)
+        if not sflog.enabled():
+            return self.backend.reduce(leafdata, rootdata, op)
+        t0 = sflog.op_begin()
+        out = self.backend.reduce(leafdata, rootdata, op)
+        sflog.op_end("SFReduce", t0, out,
+                     nbytes=self._payload_bytes(leafdata),
+                     tags=self._logtags(op))
+        return out
 
     def fetch_and_op(self, rootdata, leafdata, op="sum"):
-        return self.backend.fetch_and_op(rootdata, leafdata, op)
+        if not sflog.enabled():
+            return self.backend.fetch_and_op(rootdata, leafdata, op)
+        t0 = sflog.op_begin()
+        out = self.backend.fetch_and_op(rootdata, leafdata, op)
+        # fetch-and-op moves payload both ways (fetch + update)
+        sflog.op_end("SFFetchAndOp", t0, out,
+                     nbytes=2.0 * self._payload_bytes(leafdata),
+                     tags=self._logtags(op))
+        return out
 
     # fused multi-field exchange (VecScatter analogue) -------------------
     def _bundle(self, fields):
@@ -651,10 +755,24 @@ class SFComm:
         return pending.end(rootfields)
 
     def gather(self, leafdata):
-        return self.backend.gather(leafdata)
+        if not sflog.enabled():
+            return self.backend.gather(leafdata)
+        t0 = sflog.op_begin()
+        out = self.backend.gather(leafdata)
+        sflog.op_end("SFGather", t0, out,
+                     nbytes=self._payload_bytes(leafdata),
+                     tags=self._logtags())
+        return out
 
     def scatter(self, multirootdata, leafdata=None):
-        return self.backend.scatter(multirootdata, leafdata)
+        if not sflog.enabled():
+            return self.backend.scatter(multirootdata, leafdata)
+        t0 = sflog.op_begin()
+        out = self.backend.scatter(multirootdata, leafdata)
+        sflog.op_end("SFScatter", t0, out,
+                     nbytes=self._payload_bytes(multirootdata),
+                     tags=self._logtags())
+        return out
 
     def compute_degrees(self):
         return self.backend.compute_degrees()

@@ -43,6 +43,7 @@ import numpy as np
 from .graph import StarForest
 from .mpiops import get_op
 from .unit import UnitSpec, resolve_unit
+from . import sflog
 from ..kernels import ops as kops
 
 __all__ = ["DynPlan", "PlanCache", "star_forest_from_assignment"]
@@ -66,17 +67,37 @@ class PlanCache:
     def __init__(self, name: str = "plans"):
         self.name = name
         self._entries: Dict[Any, Any] = {}
-        self.hits = 0
-        self.misses = 0
+        # hit/miss live in the sflog registry (one pair per cache instance)
+        # so log_view/dump_json report them; .hits/.misses stay readable and
+        # assignable for existing callers.
+        self._c_hits = sflog.counter(f"plancache.{name}.hits", unique=True)
+        self._c_misses = sflog.counter(f"plancache.{name}.misses",
+                                       unique=True)
+
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @hits.setter
+    def hits(self, v: int) -> None:
+        self._c_hits.value = int(v)
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
+
+    @misses.setter
+    def misses(self, v: int) -> None:
+        self._c_misses.value = int(v)
 
     def get_or_build(self, key, builder: Callable[[], Any]):
         try:
             out = self._entries[key]
         except KeyError:
-            self.misses += 1
+            self._c_misses.add(1)
             out = self._entries[key] = builder()
             return out
-        self.hits += 1
+        self._c_hits.add(1)
         return out
 
     def __contains__(self, key) -> bool:
@@ -186,8 +207,34 @@ class DynPlan:
         return self._check_edges(leaf_root) < self.nroots
 
     # ----------------------------------------------------------------- ops
+    def _row_bytes(self, data) -> float:
+        """Logical message volume: every (non-dropped) leaf moves one row."""
+        try:
+            shape, itemsize = data.shape, data.dtype.itemsize
+        except AttributeError:
+            data = jnp.asarray(data)
+            shape, itemsize = data.shape, data.dtype.itemsize
+        row = float(itemsize)
+        for d in shape[1:]:
+            row *= d
+        return float(self.nleaves) * row
+
     def reduce(self, leafdata, leaf_root, rootdata=None, op="sum",
                unique: bool = False, leaf_rep: int = 1):
+        if not sflog.enabled():
+            return self._reduce_impl(leafdata, leaf_root, rootdata, op,
+                                     unique, leaf_rep)
+        t0 = sflog.op_begin()
+        out = self._reduce_impl(leafdata, leaf_root, rootdata, op,
+                                unique, leaf_rep)
+        sflog.op_end("SFDynReduce", t0, out,
+                     nbytes=self._row_bytes(leafdata),
+                     tags={"op": get_op(op).name, "unique": unique,
+                           "label": str(self.label)})
+        return out
+
+    def _reduce_impl(self, leafdata, leaf_root, rootdata=None, op="sum",
+                     unique: bool = False, leaf_rep: int = 1):
         """Leaf→root reduction with capacity-drop semantics.
 
         Dropped edges (``leaf_root == nroots``) accumulate onto the
@@ -263,6 +310,16 @@ class DynPlan:
         return buf[:-1]
 
     def bcast(self, rootdata, leaf_root, leafdata=None):
+        if not sflog.enabled():
+            return self._bcast_impl(rootdata, leaf_root, leafdata)
+        t0 = sflog.op_begin()
+        out = self._bcast_impl(rootdata, leaf_root, leafdata)
+        sflog.op_end("SFDynBcast", t0, out,
+                     nbytes=self._row_bytes(rootdata),
+                     tags={"label": str(self.label)})
+        return out
+
+    def _bcast_impl(self, rootdata, leaf_root, leafdata=None):
         """Root→leaf broadcast (replace).  Dropped edges read the zero drop
         row when ``leafdata`` is None (fresh buffer), otherwise keep their
         prior ``leafdata`` value — the static-SF convention for leaves
@@ -300,6 +357,7 @@ class _Sizes:
 
     nroots_total: int
     nleafspace_total: int
+    nedges_total: int = 0
 
 
 class BoundDynSF:
@@ -315,7 +373,7 @@ class BoundDynSF:
         self.plan = plan
         self.leaf_root = leaf_root
         self.unique = unique
-        self.sf = _Sizes(plan.nroots, plan.nleaves)
+        self.sf = _Sizes(plan.nroots, plan.nleaves, plan.nleaves)
         self.backend = self
         self.unit = UnitSpec()     # fused payloads widen the row unit
 

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import time
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -43,8 +44,15 @@ import numpy as np
 
 from .mpiops import get_op
 from .unit import UnitSpec
+from . import sflog
 
 __all__ = ["FieldSpec", "FieldBundle", "PendingMulti"]
+
+# fusion counters (always live, like the PlanCache hit/miss counters):
+# multi calls issued, fused exchanges actually executed, fields they carried
+_C_CALLS = sflog.counter("fields.multi_calls")
+_C_EXCH = sflog.counter("fields.fused_exchanges")
+_C_FIELDS = sflog.counter("fields.fields_moved")
 
 # bitcast carrier per itemsize for mixed-dtype REPLACE groups
 _CARRIER = {1: np.dtype(np.uint8), 2: np.dtype(np.uint16),
@@ -216,14 +224,35 @@ class FieldBundle:
                              f"bundles fuse same-length exchanges over the "
                              f"SF's {nrows} rows only")
 
-    def _run(self, srcs, dsts, op, exchange, nsrc: int, ndst: int):
+    def _group_bytes(self, g: _Group) -> float:
+        """Comm volume of one fused exchange: plan edges x fused row bytes
+        (the carrier width for multi-member groups)."""
+        ne = float(getattr(self.comm.sf, "nedges_total", 0))
+        if len(g.members) == 1:
+            sp = self.specs[g.members[0]]
+            return ne * sp.size * sp.dtype.itemsize
+        return ne * g.width * np.dtype(g.carrier).itemsize
+
+    def _run(self, srcs, dsts, op, exchange, nsrc: int, ndst: int,
+             kind: str = "bcast"):
         opname = get_op(op).name
+        groups = self._groups(opname)
+        logging = sflog.enabled()
+        evname = f"SF{kind.capitalize()}Multi"
+        _C_CALLS.add(1)
+        _C_EXCH.add(len(groups))
+        _C_FIELDS.add(len(self.specs))
         out: List[Optional[jnp.ndarray]] = [None] * len(self.specs)
-        for g in self._groups(opname):
+        for g in groups:
             if len(g.members) == 1:
                 i = g.members[0]
+                t0 = sflog.op_begin() if logging else 0.0
                 out[i] = exchange(jnp.asarray(srcs[i]), jnp.asarray(dsts[i]),
                                   op)
+                if logging:
+                    sflog.op_end(evname, t0, out[i],
+                                 nbytes=self._group_bytes(g),
+                                 tags={"op": opname, "fields": 1})
                 continue
             fsrc = jnp.concatenate(
                 [_to_carrier(srcs[i], nsrc, w, g.carrier, g.bitcast)
@@ -231,7 +260,12 @@ class FieldBundle:
             fdst = jnp.concatenate(
                 [_to_carrier(dsts[i], ndst, w, g.carrier, g.bitcast)
                  for i, w in zip(g.members, g.widths)], axis=1)
+            t0 = sflog.op_begin() if logging else 0.0
             fused = exchange(fsrc, fdst, op)
+            if logging:
+                sflog.op_end(evname, t0, fused,
+                             nbytes=self._group_bytes(g),
+                             tags={"op": opname, "fields": len(g.members)})
             for k, i in enumerate(g.members):
                 cols = fused[:, g.offsets[k]: g.offsets[k + 1]]
                 out[i] = _from_carrier(cols, self.specs[i], ndst, g.bitcast)
@@ -245,7 +279,7 @@ class FieldBundle:
         self._check(rootfields, "rootdata", nroot)
         self._check(leaffields, "leafdata", nleaf)
         return self._run(rootfields, leaffields, op, self._exec.bcast,
-                         nroot, nleaf)
+                         nroot, nleaf, kind="bcast")
 
     def reduce_multi(self, leaffields, rootfields, op="sum"):
         """k leaf→root reductions as one fused exchange per group; returns
@@ -255,7 +289,7 @@ class FieldBundle:
         self._check(leaffields, "leafdata", nleaf)
         self._check(rootfields, "rootdata", nroot)
         return self._run(leaffields, rootfields, op, self._exec.reduce,
-                         nleaf, nroot)
+                         nleaf, nroot, kind="reduce")
 
     # ------------------------------------------------- split-phase (begin/end)
     def _fused_src(self, g: _Group, srcs, nsrc: int):
@@ -268,13 +302,36 @@ class FieldBundle:
     def _multi_begin(self, kind: str, srcs, op, nsrc: int) -> PendingMulti:
         opn = get_op(op)
         begin = getattr(self._exec, f"{kind}_begin", None)
+        groups = self._groups(opn.name)
+        logging = sflog.enabled()
+        t0 = sflog.op_begin() if logging else 0.0
+        _C_CALLS.add(1)
+        _C_EXCH.add(len(groups))
+        _C_FIELDS.add(len(self.specs))
         items: List[Tuple[_Group, Any]] = []
-        for g in self._groups(opn.name):
+        for g in groups:
             fsrc = self._fused_src(g, srcs, nsrc)
             items.append((g, fsrc if begin is None else begin(fsrc, opn)))
-        return PendingMulti(kind, self, opn, items, deferred=begin is None)
+        pend = PendingMulti(kind, self, opn, items, deferred=begin is None)
+        if logging:
+            nb = sum(self._group_bytes(g) for g in groups)
+            tags = {"op": opn.name, "groups": len(groups),
+                    "fields": len(self.specs)}
+            ev = f"SF{kind.capitalize()}Multi"
+            sflog.op_end(ev + "Begin", t0, None, nbytes=nb, tags=tags)
+            sflog.stash_pending(pend, ev + "End", nb, tags, tracing=t0 < 0)
+        return pend
 
     def _multi_end(self, pending: PendingMulti, dsts):
+        info = sflog.claim_pending(pending)
+        if info is not None:
+            t0 = time.perf_counter()
+            out = self._multi_end_impl(pending, dsts)
+            sflog.pending_end(info, t0, out)
+            return out
+        return self._multi_end_impl(pending, dsts)
+
+    def _multi_end_impl(self, pending: PendingMulti, dsts):
         kind = pending.kind
         what = "leafdata" if kind == "bcast" else "rootdata"
         ndst = self.comm.sf.nleafspace_total if kind == "bcast" \

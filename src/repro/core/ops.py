@@ -16,6 +16,7 @@ it, so the latency-hiding scheduler overlaps them (DESIGN.md §3.2).
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Optional, Tuple
 
@@ -27,6 +28,7 @@ from .graph import StarForest
 from .mpiops import Op, get_op
 from .plan import GlobalPlan, build_global_plan
 from .unit import check_plan_unit
+from . import sflog
 
 __all__ = [
     "SFOps", "PendingComm",
@@ -43,9 +45,15 @@ class PendingComm:
 
     def end(self, data: jnp.ndarray) -> jnp.ndarray:
         """Complete the operation against the destination array."""
+        info = sflog.claim_pending(self)
+        t0 = time.perf_counter() if info is not None else 0.0
         if self.kind == "bcast":
-            return self.owner.bcast_end(self, data)
-        return self.owner.reduce_end(self, data)
+            out = self.owner.bcast_end(self, data)
+        else:
+            out = self.owner.reduce_end(self, data)
+        if info is not None:
+            sflog.pending_end(info, t0, out)
+        return out
 
 
 def _apply_unique(target: jnp.ndarray, idx: np.ndarray, vals: jnp.ndarray,

@@ -80,8 +80,44 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
 # --------------------------------------------------------------------------
 Key = Tuple
 _WINNERS: Dict[Key, str] = {}
-_STATS = {"sweeps": 0, "hits": 0, "defaults": 0, "pinned": 0,
-          "candidate_errors": 0}
+
+
+class _StatCounters:
+    """Mapping facade over sflog registry counters.
+
+    Keeps the historical ``_STATS["hits"] += 1`` call sites and the
+    ``stats()``/``clear_cache()`` contract intact while the values live in
+    :mod:`repro.core.sflog` (so ``log_view``/``dump_json`` report autotune
+    activity).  The sflog import is deferred to first use: ``repro.core``
+    imports this module during package init, so a module-level import would
+    be circular.
+    """
+
+    _KEYS = ("sweeps", "hits", "defaults", "pinned", "candidate_errors")
+
+    def __init__(self):
+        self._c = None
+
+    def _counters(self):
+        if self._c is None:
+            from ..core import sflog
+            self._c = {k: sflog.counter(f"tuning.{k}") for k in self._KEYS}
+        return self._c
+
+    def __getitem__(self, k: str) -> int:
+        return self._counters()[k].value
+
+    def __setitem__(self, k: str, v: int) -> None:
+        self._counters()[k].value = int(v)
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def keys(self):
+        return self._KEYS
+
+
+_STATS = _StatCounters()
 
 # Below this many payload elements the lowering choice is noise — take the
 # default instead of paying a sweep (override with REPRO_SF_AUTOTUNE=1).

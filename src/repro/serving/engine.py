@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import sflog
 from ..core.dynplan import PlanCache
 from ..models import transformer as T
 from ..models.config import ModelConfig
@@ -115,10 +116,25 @@ class ServeEngine:
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.t_start: Optional[float] = None
-        self.steps = 0
+        # service tallies live in the sflog registry (per-engine counters);
+        # .steps stays a readable/assignable attribute via the property below
+        self._c_steps = sflog.counter("serve.decode_steps", unique=True)
+        self._c_tokens = sflog.counter("serve.tokens_generated", unique=True)
+        self._c_ttft_n = sflog.counter("serve.ttft_slo_total", unique=True)
+        self._c_ttft_ok = sflog.counter("serve.ttft_slo_ok", unique=True)
+        self._c_tpot_n = sflog.counter("serve.tpot_slo_total", unique=True)
+        self._c_tpot_ok = sflog.counter("serve.tpot_slo_ok", unique=True)
 
         # compiled-program cache: ("prefill", bucket) / ("decode", batch)
         self.programs = PlanCache("serve-programs")
+
+    @property
+    def steps(self) -> int:
+        return self._c_steps.value
+
+    @steps.setter
+    def steps(self, v: int) -> None:
+        self._c_steps.value = int(v)
 
     # -------------------------------------------------------------- prefill
     def _bucket(self, plen: int) -> int:
@@ -219,9 +235,13 @@ class ServeEngine:
                 bucket = self._bucket(plen)
                 toks = np.zeros((1, bucket), np.int32)
                 toks[0, :plen] = req.tokens
+                t0 = sflog.op_begin() if sflog.enabled() else None
                 logits, cache1 = self._prefill_fn(bucket)(
                     self.params, jnp.asarray(toks),
                     jnp.asarray([plen - 1], np.int32))
+                if t0 is not None:
+                    sflog.op_end("ServePrefill", t0, logits,
+                                 tags={"bucket": bucket, "rid": req.rid})
                 # copy slot rows into the engine cache
                 for name in ("k", "v"):
                     self.cache[name] = self.cache[name].at[:, slot].set(
@@ -231,6 +251,7 @@ class ServeEngine:
                         cache1["h"][:, 0])
                 first = int(self._sample(logits)[0])
                 req.out.append(first)
+                self._c_tokens.add(1)
                 req.t_first = req.t_last = self.clock()
                 self.positions[slot] = plen
                 self.active[slot] = req
@@ -254,11 +275,15 @@ class ServeEngine:
         for s, r in enumerate(self.active):
             if r is not None:
                 last[s] = r.out[-1] if r.out else r.tokens[-1]
+        t0 = sflog.op_begin() if sflog.enabled() else None
         logits, self.cache = self._decode_fn()(
             self.params, jnp.asarray(last), self.cache,
             jnp.asarray(self.positions))
+        if t0 is not None:
+            sflog.op_end("ServeDecode", t0, logits,
+                         tags={"batch": self.batch})
         nxt = self._sample(logits)
-        self.steps += 1
+        self._c_steps.add(1)
         now = self.clock()
         n_active = 0
         for s, r in enumerate(self.active):
@@ -266,12 +291,14 @@ class ServeEngine:
                 continue
             tok = int(nxt[s])
             r.out.append(tok)
+            self._c_tokens.add(1)
             r.t_last = now
             self.positions[s] += 1
             hit_eos = self.eos_id is not None and tok == self.eos_id
             if hit_eos or len(r.out) >= r.max_new or \
                     self.positions[s] >= self.s_max - 1:
                 r.done = True
+                self._finish_tallies(r)
                 self.finished.append(r)
                 self.active[s] = None
             else:
@@ -286,6 +313,17 @@ class ServeEngine:
         return requests
 
     # -------------------------------------------------------------- metrics
+    def _finish_tallies(self, r: Request) -> None:
+        """Registry-side SLO tallies, bumped once per finished request."""
+        if self.ttft_slo is not None and r.ttft is not None:
+            self._c_ttft_n.add(1)
+            if r.ttft <= self.ttft_slo:
+                self._c_ttft_ok.add(1)
+        if self.tpot_slo is not None and r.tpot is not None:
+            self._c_tpot_n.add(1)
+            if r.tpot <= self.tpot_slo:
+                self._c_tpot_ok.add(1)
+
     def metrics(self) -> Dict:
         """Aggregate service metrics over finished requests: tokens/sec,
         TTFT/TPOT p50/p99, SLO attainment, program-cache stats."""

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import sflog
 from ..core.backend import SFComm
 from ..core.dynplan import PlanCache
 from ..core.fields import FieldBundle, FieldSpec
@@ -260,10 +261,16 @@ class DDPGradReducer:
         if len(flat) != self.plan.nleaves:
             raise ValueError(f"grads tree has {len(flat)} leaves, plan has "
                              f"{self.plan.nleaves}")
+        t0 = sflog.op_begin() if sflog.enabled() else None
         pendings = []
         for b, bundle in zip(self.plan.buckets, self._bundles):
             fields = self._bucket_fields(flat, b)
             pendings.append((b, bundle.reduce_multi_begin(fields, "sum")))
+        if t0 is not None:
+            sflog.op_end(
+                "DDPBucketReduceBegin", t0, None,
+                nbytes=float(self.grains) * self.plan.total_bytes,
+                tags={"nbuckets": self.plan.nbuckets, "world": self.world})
         return pendings
 
     def bucket_reduce_end(self, pendings, grain_grads, *,
@@ -271,6 +278,7 @@ class DDPGradReducer:
         """Complete every in-flight bucket; returns the reduced grads tree
         with the grain axis folded away (summed over grains, divided by
         ``grains`` when ``average``)."""
+        t0 = sflog.op_begin() if sflog.enabled() else None
         treedef = jax.tree_util.tree_structure(grain_grads)
         flat_out: List[Optional[jnp.ndarray]] = [None] * self.plan.nleaves
         for b, pending in pendings:
@@ -285,7 +293,12 @@ class DDPGradReducer:
                         if np.dtype(r.dtype).kind == "f" \
                         else r // self.grains
                 flat_out[i] = r
-        return jax.tree_util.tree_unflatten(treedef, flat_out)
+        out = jax.tree_util.tree_unflatten(treedef, flat_out)
+        if t0 is not None:
+            sflog.op_end(
+                "DDPBucketReduceEnd", t0, flat_out,
+                tags={"nbuckets": self.plan.nbuckets, "world": self.world})
+        return out
 
     def allreduce(self, grain_grads, *, average: bool = True):
         """One-shot bucketed allreduce: begin + end."""

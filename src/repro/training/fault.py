@@ -21,6 +21,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..core import sflog
 from .checkpoint import CheckpointManager
 
 __all__ = ["SimulatedFailure", "StragglerDetector", "run_with_restarts"]
@@ -102,7 +103,13 @@ def run_with_restarts(step_fn: Callable[[int, Dict], Dict],
     while step < total_steps:
         try:
             t0 = time.perf_counter()
+            lt0 = sflog.op_begin() if sflog.enabled() else None
             state = step_fn(step, state)
+            if lt0 is not None:
+                sflog.op_end("TrainStep", lt0, None,
+                             tags={"step": step,
+                                   "world": state.get("world"),
+                                   "restarts": restarts})
             dt = time.perf_counter() - t0
             state["straggler_flag"] = detector.observe(dt)
             if comm_metrics is not None:
